@@ -1,0 +1,111 @@
+"""Shared benchmark plumbing: env construction + policy evaluation."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from repro.ckpt import restore_checkpoint
+from repro.core import baselines as BL
+from repro.core import policy as P
+from repro.core.rollout import (make_baseline_period, make_policy_period,
+                                run_episode)
+from repro.sim.arrivals import ArrivalConfig
+from repro.sim.env import EnvConfig, SchedulingEnv
+from repro.workloads import build_registry
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUNS = os.path.join(REPO, "runs")
+
+# trained RELMAS checkpoints (produced by launch/rl_train.py; see
+# EXPERIMENTS.md for the training commands + curves).  `_hard` runs are
+# trained in the calibrated evaluation regime (load 1.3, QoS-factor 2.5
+# — chosen so the heuristic baselines land mid-range, the paper's
+# discriminative regime; the QoS-Medium factor is unpublished,
+# DESIGN.md §3); `_medium` are the legacy low-load runs.
+EVAL_LOAD = 1.3
+EVAL_QOS_FACTOR = 2.5
+
+
+def _ckpt(w: str) -> str:
+    hard = os.path.join(RUNS, f"{w}_hard", "best")
+    return hard if os.path.isdir(hard) else \
+        os.path.join(RUNS, f"{w}_medium", "best")
+
+
+CKPTS = {w: _ckpt(w) for w in ("light", "heavy", "mixed")}
+
+
+def make_env(workload: str, *, qos: str = "medium", qos_factor: float = 3.0,
+             load: float = 0.9, bandwidth: float = 16.0,
+             t_s_us: float = 500.0, periods: int = 60, max_rq: int = 96,
+             max_jobs: int = 64) -> SchedulingEnv:
+    """Defaults MATCH launch/rl_train.py's training environment — the
+    trained checkpoints are evaluated in-distribution (the paper trains
+    RELMAS per scenario); shorter horizons cannot even complete a Heavy
+    job (InceptionV3 min latency 18 ms vs 0.6*T_S*periods horizon)."""
+    reg = build_registry(workload)
+    ecfg = EnvConfig(t_s_us=t_s_us, periods=periods, max_rq=max_rq,
+                     max_jobs=max_jobs, bandwidth_gbps=bandwidth)
+    arr = ArrivalConfig(max_jobs=max_jobs, load=load, qos_factor=qos_factor,
+                        qos_level=qos, horizon_us=ecfg.horizon_us,
+                        slack_us=2.0 * t_s_us)
+    return SchedulingEnv(reg, ecfg, arr)
+
+
+def load_relmas(env: SchedulingEnv, workload: str, hidden: int = 64):
+    pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
+                          hidden=hidden)
+    params = P.init_actor(jax.random.PRNGKey(0), pcfg)
+    ck = CKPTS.get(workload)
+    trained = False
+    if ck and os.path.isdir(ck):
+        try:
+            params, _, _ = restore_checkpoint(ck, params)
+            trained = True
+        except (KeyError, ValueError, FileNotFoundError):
+            pass
+    return params, pcfg, trained
+
+
+def eval_policy(env: SchedulingEnv, name: str, *, workload: str,
+                seeds=range(7000, 7003), magma_cfg=None) -> dict:
+    """-> mean metrics for one scheduler on one env."""
+    out: dict[str, list] = {}
+    if name == "relmas":
+        params, pcfg, trained = load_relmas(env, workload)
+        period = make_policy_period(env, pcfg)
+        for s in seeds:
+            m, _ = run_episode(env, period, np.random.default_rng(s),
+                               params=params, key=jax.random.PRNGKey(s))
+            for k, v in m.items():
+                out.setdefault(k, []).append(v)
+        res = {k: float(np.mean(v)) for k, v in out.items()}
+        res["trained"] = trained
+        return res
+    if name == "magma":
+        mcfg = magma_cfg or BL.MagmaConfig(population=24, generations=12)
+
+        def period(state, trace):
+            def act_fn(feats, mask, slots, st):
+                return BL.magma(slots, st, env, mcfg)
+            return env.period(state, trace, act_fn)
+
+        for s in seeds:
+            m, _ = run_episode(env, period, np.random.default_rng(s))
+            for k, v in m.items():
+                out.setdefault(k, []).append(v)
+        return {k: float(np.mean(v)) for k, v in out.items()}
+    period = make_baseline_period(env, BL.BASELINES[name])
+    for s in seeds:
+        m, _ = run_episode(env, period, np.random.default_rng(s))
+        for k, v in m.items():
+            out.setdefault(k, []).append(v)
+    return {k: float(np.mean(v)) for k, v in out.items()}
+
+
+def geomean_improvement(a: list[float], b: list[float]) -> float:
+    """Geometric-mean relative improvement of a over b (paper metric)."""
+    ratios = [(x + 1e-6) / (y + 1e-6) for x, y in zip(a, b)]
+    return float(np.exp(np.mean(np.log(ratios))) - 1.0)

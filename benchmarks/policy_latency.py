@@ -1,0 +1,44 @@
+"""Scheduler-overhead microbenchmark: wall-time + MACs per invocation.
+
+The paper's viability argument (Sec. 5.3): the policy is ~0.04% of an
+AlexNet per RQ layer.  We measure the jitted end-to-end invocation
+latency on this host and reproduce the MAC accounting.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy as P
+
+ALEXNET_MACS = 714_188_480     # conv+fc MACs of AlexNet-227
+
+
+def run(*, hidden: int = 256, rq: int = 96, iters: int = 30) -> dict:
+    pcfg = P.PolicyConfig(feat_dim=16, act_dim=7, hidden=hidden)
+    params = P.init_actor(jax.random.PRNGKey(0), pcfg)
+    feats = jax.random.normal(jax.random.PRNGKey(1), (rq + 1, 16))
+    mask = jnp.ones((rq + 1,), bool)
+    fn = jax.jit(lambda p, f, m: P.actor_apply(p, pcfg, f, m))
+    fn(params, feats, mask).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(params, feats, mask).block_until_ready()
+    us = (time.perf_counter() - t0) / iters * 1e6
+    macs = P.actor_macs_per_timestep(pcfg)
+    frac = macs / ALEXNET_MACS
+    print(f"policy_latency,hidden={hidden},rq={rq},us_per_call={us:.1f},"
+          f"macs_per_step={macs},frac_of_alexnet={frac * 100:.4f}%",
+          flush=True)
+    return {"us_per_call": us, "macs_per_timestep": macs,
+            "frac_of_alexnet": frac}
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

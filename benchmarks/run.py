@@ -1,0 +1,68 @@
+"""Benchmark harness — one entry per paper table/figure + repo extras.
+
+  python -m benchmarks.run            # quick CI-sized pass (default)
+  python -m benchmarks.run --full     # paper-sized episode counts
+  python -m benchmarks.run --only fig3,roofline
+
+Output: CSV-ish lines per benchmark (stable prefixes: fig3, fig4, fig5,
+table1, table2, policy_latency, straggler, rooflinesummary) + a final
+JSON summary line.  The roofline entry renders the dry-run sweep
+(runs/dryrun/all.jsonl) produced by launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig4,fig5,table1,policy,"
+                         "straggler,roofline")
+    ap.add_argument("--no-magma", action="store_true",
+                    help="skip the GA baseline (slowest bench)")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    results = {}
+    t0 = time.time()
+    if want("table1"):
+        from benchmarks import table1_costmodel
+        results["table1"] = table1_costmodel.run()
+    if want("policy"):
+        from benchmarks import policy_latency
+        results["policy_latency"] = policy_latency.run()
+    if want("fig5"):
+        from benchmarks import fig5_overhead
+        results["fig5"] = fig5_overhead.run(quick=quick)["summary"]
+    if want("fig3"):
+        from benchmarks import fig3_sla
+        results["fig3"] = fig3_sla.run(
+            quick=quick, with_magma=not args.no_magma)["summary"]
+    if want("fig4"):
+        from benchmarks import fig4_bandwidth
+        results["fig4"] = fig4_bandwidth.run(quick=quick)["summary"]
+    if want("straggler"):
+        from benchmarks import straggler_bench
+        results["straggler"] = straggler_bench.run(quick=quick)["drop"]
+    if want("roofline"):
+        from benchmarks import roofline_report
+        results["roofline"] = roofline_report.run()
+    results["wall_s"] = round(time.time() - t0, 1)
+    print("benchsummary," + json.dumps(results, default=str), flush=True)
+    import os
+    os.makedirs("runs", exist_ok=True)
+    with open("runs/bench_summary.json", "w") as f:
+        json.dump(results, f, default=str, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

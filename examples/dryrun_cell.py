@@ -1,0 +1,17 @@
+"""Inspect one production dry-run cell without the full sweep.
+
+Lowers + compiles mixtral-8x7b x train_4k on the 256-chip mesh (the
+same artifact EXPERIMENTS.md §Dry-run tabulates for all 40 cells) and
+prints the memory analysis, cost analysis and collective schedule.
+
+Run:  PYTHONPATH=src python examples/dryrun_cell.py [arch] [shape]
+(~1-2 min: XLA compiles a 256-way SPMD module on CPU.)
+"""
+import subprocess
+import sys
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "mixtral-8x7b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+raise SystemExit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.dryrun",
+     "--arch", arch, "--shape", shape, "--roofline"]))

@@ -1,0 +1,57 @@
+"""Quickstart: the paper's pipeline in ~60 lines.
+
+1. Characterize DNN models on the heterogeneous MAS (registration phase)
+2. Build the multi-tenant scheduling environment
+3. Compare an untrained RELMAS policy with the heuristic baselines
+4. Run a few DDPG updates on collected experience
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import baselines as BL
+from repro.core import ddpg as D
+from repro.core import policy as P
+from repro.core.replay import ReplayBuffer
+from repro.core.rollout import (make_baseline_period, make_policy_period,
+                                run_episode)
+from repro.sim.arrivals import ArrivalConfig
+from repro.sim.env import EnvConfig, SchedulingEnv
+from repro.workloads import build_registry
+
+# 1. registration phase: latency/bandwidth/energy tables (paper Sec. 3)
+registry = build_registry("light")          # SqueezeNet, YOLO-Lite, KWS
+print("tenants:", registry.model_names)
+
+# 2. environment: 6-SA heterogeneous MAS + Pareto arrivals (Sec. 5)
+ecfg = EnvConfig(periods=16, max_rq=32, max_jobs=16)
+env = SchedulingEnv(registry, ecfg,
+                    ArrivalConfig(max_jobs=16, horizon_us=ecfg.horizon_us,
+                                  slack_us=2 * ecfg.t_s_us))
+
+# 3. baselines vs a freshly initialized RELMAS policy
+for name, fn in BL.BASELINES.items():
+    m, _ = run_episode(env, make_baseline_period(env, fn),
+                       np.random.default_rng(0))
+    print(f"{name:>8s}: SLA satisfaction {m['sla_rate']:.3f}")
+
+pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim, hidden=32)
+dcfg = D.DDPGConfig(policy=pcfg)
+state = D.init_ddpg(jax.random.PRNGKey(0), dcfg)
+period = make_policy_period(env, pcfg)
+m, trans = run_episode(env, period, np.random.default_rng(0),
+                       params=state.actor, key=jax.random.PRNGKey(1),
+                       sigma=0.3, collect=True)
+print(f"  relmas: SLA satisfaction {m['sla_rate']:.3f} (untrained)")
+
+# 4. a few DDPG updates from the replay buffer (Sec. 4.2)
+buf = ReplayBuffer(256, env.seq_len, env.feat_dim, env.act_dim)
+for t in trans:
+    buf.add(t["s"], t["mask"], t["a"], t["r"], t["s2"], t["mask2"])
+for i in range(10):
+    batch = {k: jax.numpy.asarray(v) for k, v in buf.sample(16).items()}
+    state, info = D.ddpg_update_jit(state, dcfg, batch)
+print(f"after 10 updates: critic_loss={float(info['critic_loss']):.4f} "
+      f"q_mean={float(info['q_mean']):.3f}")
+print("see launch/rl_train.py for the full training driver")

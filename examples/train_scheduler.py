@@ -1,0 +1,32 @@
+"""Train the RELMAS scheduler (DDPG) on the Light workload — a reduced
+version of the EXPERIMENTS.md runs that finishes in a few minutes on CPU.
+
+Run:  PYTHONPATH=src python examples/train_scheduler.py [--episodes 40]
+
+The driver is fault-tolerant: kill it mid-run and rerun the same
+command — it resumes from the latest checkpoint.
+"""
+import argparse
+
+from repro.launch.rl_train import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=40)
+    ap.add_argument("--outdir", default="runs/example_scheduler")
+    args = ap.parse_args()
+    cfg = TrainConfig(workload="light", episodes=args.episodes,
+                      hidden=32, max_rq=48, max_jobs=24, periods=30,
+                      warmup_episodes=3, updates_per_episode=15,
+                      eval_every=10, eval_seeds=3, outdir=args.outdir)
+    out = train(cfg)
+    print(f"best eval SLA: {out['best'].get('sla_rate'):.3f} "
+          f"at episode {out['best'].get('episode')}")
+    first = [h["sla"] for h in out["history"][:5]]
+    last = [h["sla"] for h in out["history"][-5:]]
+    print(f"train SLA: first5={sum(first) / 5:.3f} last5={sum(last) / 5:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Inject generated artifacts into EXPERIMENTS.md markers.
+
+  PYTHONPATH=src python scripts/finalize_experiments.py \
+      [--bench runs/bench_summary.json]
+
+- <!-- ROOFLINE_TABLE -->  <- benchmarks.roofline_report over the sweep
+- <!-- BENCH_RESULTS -->   <- summary lines from the benchmark harness
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import json
+import os
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import roofline_report                      # noqa: E402
+
+REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+EXP = os.path.join(REPO, "EXPERIMENTS.md")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=None,
+                    help="JSON file with benchmarks.run results")
+    args = ap.parse_args()
+
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        roofline_report.run()
+    table = "\n".join(l for l in buf.getvalue().splitlines()
+                      if l.startswith("|") or l.startswith(
+                          "rooflinesummary"))
+    table = table.replace("rooflinesummary,", "\nSummary: ")
+
+    text = open(EXP).read()
+    start = text.find("<!-- ROOFLINE_TABLE -->")
+    if start >= 0:
+        end = text.find("\n\nReading the table", start)
+        text = text[:start] + "<!-- ROOFLINE_TABLE -->\n\n" + table + \
+            text[end:]
+
+    if args.bench and os.path.exists(args.bench):
+        bench = json.load(open(args.bench))
+        lines = ["```json"]
+        for k in ("fig3", "fig4", "fig5", "policy_latency", "straggler"):
+            if k in bench:
+                lines.append(f"{k}: " + json.dumps(bench[k], default=str))
+        lines.append("```")
+        blob = "\n".join(lines)
+        start = text.find("<!-- BENCH_RESULTS -->")
+        if start >= 0:
+            end = text.find("\n\nClaim checklist:", start)
+            text = text[:start] + "<!-- BENCH_RESULTS -->\n\n" + blob + \
+                text[end:]
+    open(EXP, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Architecture configs (``--arch <id>``): the 10 assigned architectures
+plus the paper's own RELMAS scheduler config."""
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+from repro.configs.registry import ARCHS, get_arch, list_archs
+
+__all__ = ["ArchConfig", "SHAPES", "ShapeSpec", "ARCHS", "get_arch",
+           "list_archs"]

@@ -1,0 +1,15 @@
+"""RELMAS — the paper's contribution: LSTM-policy DDPG online scheduler."""
+from repro.core.policy import (
+    PolicyConfig, init_actor, init_critic, actor_apply, critic_apply,
+    actor_macs_per_timestep,
+)
+from repro.core.ddpg import DDPGConfig, DDPGState, init_ddpg, ddpg_update, act
+from repro.core.replay import ReplayBuffer
+from repro.core.scheduler import RelmasScheduler
+from repro.core import baselines
+
+__all__ = [
+    "PolicyConfig", "init_actor", "init_critic", "actor_apply", "critic_apply",
+    "actor_macs_per_timestep", "DDPGConfig", "DDPGState", "init_ddpg",
+    "ddpg_update", "act", "ReplayBuffer", "RelmasScheduler", "baselines",
+]

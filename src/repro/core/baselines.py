@@ -1,0 +1,212 @@
+"""Baseline scheduling policies (paper Sec. 5.1).
+
+All baselines emit the same action interface as RELMAS — a temporal
+priority and an SA choice per RQ slot — and are evaluated on the
+*identical* simulation platform:
+
+- FCFS-H   : first-come-first-served priority + min-finish-time SA
+             heuristic (greedy, contention-free estimate).
+- PREMA-H  : PREMA-style token mechanism (tokens grow with normalized
+             waiting time) + shortest-job-first among high-token jobs,
+             paired with the same SA heuristic (the original PREMA
+             targets a monolithic accelerator).
+- Herald   : EDF priority + load-balancing SA choice (argmin of
+             accumulated SA load), after Kwon et al.'s HDA scheduler.
+- MAGMA    : genetic algorithm over (priority vector, SA assignment)
+             with SLA-aware fitness, evaluated by the real contention
+             engine (vmapped over the population), custom operators
+             as in Kao & Krishna (crossover + gaussian/reset mutation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.engine import simulate_jax, INF
+
+
+# ---------------------------------------------------------------------------
+# Greedy SA heuristic shared by FCFS-H / PREMA-H (min est. finish time)
+# ---------------------------------------------------------------------------
+def _greedy_sa(slots, sa_free_rel, prio, mode: str, num_jobs: int):
+    """Sequential greedy assignment in descending-priority order.
+
+    mode='finish': pick SA minimizing this SJ's estimated finish time.
+    mode='load'  : pick SA minimizing resulting accumulated load (Herald).
+    Contention-free estimates (it is a heuristic, as in the paper).
+    """
+    R = prio.shape[0]
+    order = jnp.argsort(-(prio - jnp.arange(R) * 1e-6))  # stable desc
+    cost_all = slots["cost_all"]
+    valid = slots["valid"]
+
+    def body(carry, s):
+        avail, javail = carry
+        j = slots["job"][s]
+        est_start = jnp.maximum(avail, jnp.maximum(javail[j],
+                                                   slots["ready_rel"][s]))
+        fin = est_start + cost_all[s]
+        if mode == "finish":
+            score = fin
+        else:  # load balance: resulting busy-time per SA
+            score = avail + cost_all[s]
+        m = jnp.argmin(jnp.where(cost_all[s] > 0, score, INF)).astype(jnp.int32)
+        ok = valid[s]
+        avail = jnp.where(ok, avail.at[m].set(fin[m]), avail)
+        javail = jnp.where(ok, javail.at[j].set(fin[m]), javail)
+        return (avail, javail), m
+
+    init = (sa_free_rel, jnp.zeros((num_jobs,), jnp.float32))
+    (_, _), sa_ordered = jax.lax.scan(body, init, order)
+    sa = jnp.zeros((R,), jnp.int32).at[order].set(sa_ordered)
+    return sa
+
+
+def _pack_actions(prio, sa, num_sas):
+    onehot = jax.nn.one_hot(sa, num_sas, dtype=jnp.float32) * 2.0 - 1.0
+    return jnp.concatenate([prio[:, None], onehot], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+def fcfs_h(slots, state, env):
+    """FCFS priority (earlier arrival first) + min-finish SA heuristic."""
+    t = state["t"]
+    prio = jnp.clip(-(slots["arrival"] - t) / (100.0 * env.cfg.t_s_us),
+                    -1.0, 1.0)
+    prio = jnp.where(slots["valid"], prio, -1.0)
+    sa_free_rel = jnp.maximum(0.0, state["sa_free"] - t)
+    sa = _greedy_sa(slots, sa_free_rel, prio, "finish", env.cfg.max_jobs)
+    return _pack_actions(prio, sa, env.num_sas), prio, sa
+
+
+def prema_h(slots, state, env):
+    """PREMA tokens (waiting/budget) gate + SJF among high-token jobs."""
+    t = state["t"]
+    token = jnp.where(slots["valid"],
+                      (t - slots["arrival"]) / jnp.maximum(slots["q"], 1e-3),
+                      0.0)
+    max_tok = jnp.max(token)
+    cand = token >= 0.5 * max_tok
+    # SJF score: smaller isolated layer cost -> higher priority
+    min_c = jnp.where(slots["cost_all"] > 0,
+                      slots["cost_all"], INF).min(axis=1)
+    sjf = -jnp.clip(min_c / env.cfg.t_s_us, 0.0, 2.0) / 2.0  # in [-1, 0]
+    prio = jnp.where(cand, 0.5 + 0.5 * (sjf + 1.0), 0.5 * (sjf + 1.0) - 1.0)
+    prio = jnp.where(slots["valid"], jnp.clip(prio, -1.0, 1.0), -1.0)
+    sa_free_rel = jnp.maximum(0.0, state["sa_free"] - t)
+    sa = _greedy_sa(slots, sa_free_rel, prio, "finish", env.cfg.max_jobs)
+    return _pack_actions(prio, sa, env.num_sas), prio, sa
+
+
+def herald(slots, state, env):
+    """EDF priority + load-balancing SA selection (HDA/Herald-style)."""
+    t = state["t"]
+    prio = jnp.clip(1.0 - (slots["deadline"] - t)
+                    / (env.cfg.ttd_norm_periods * env.cfg.t_s_us), -1.0, 1.0)
+    prio = jnp.where(slots["valid"], prio, -1.0)
+    sa_free_rel = jnp.maximum(0.0, state["sa_free"] - t)
+    sa = _greedy_sa(slots, sa_free_rel, prio, "load", env.cfg.max_jobs)
+    return _pack_actions(prio, sa, env.num_sas), prio, sa
+
+
+# ---------------------------------------------------------------------------
+# MAGMA: genetic algorithm (offline-strength baseline, run per period)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MagmaConfig:
+    population: int = 100   # paper settings: 100 x 100
+    generations: int = 100
+    tournament: int = 4
+    cx_prob: float = 0.8
+    mut_sigma: float = 0.25
+    mut_prob: float = 0.15
+    seed: int = 0
+
+
+def _magma_fitness(env, state, slots, prio_pop, sa_pop):
+    """Vectorized fitness: projected job-completion SLA hits + slack."""
+    t = state["t"]
+    sa_free_rel = jnp.maximum(0.0, state["sa_free"] - t)
+
+    # a slot is "job-final" if it is the last uncommitted layer of its job
+    job = slots["job"]
+    nxt_same = jnp.concatenate([(job[1:] == job[:-1]) & slots["valid"][1:],
+                                jnp.array([False])])
+    is_final = slots["valid"] & ~nxt_same
+
+    def one(prio, sa):
+        take = lambda x: jnp.take_along_axis(x, sa[:, None], axis=1)[:, 0]
+        _, fin = simulate_jax(
+            slots["valid"], sa, prio, take(slots["cost_all"]),
+            take(slots["bw_all"]), slots["dep"], slots["ready_rel"],
+            sa_free_rel, jnp.float32(env.cfg.bandwidth_gbps),
+            num_sas=env.num_sas)
+        hit = (t + fin) <= slots["deadline"]
+        slack = jnp.clip((slots["deadline"] - (t + fin))
+                         / jnp.maximum(slots["q"], 1e-3), -3.0, 3.0)
+        return (jnp.sum(jnp.where(is_final, hit, False))
+                + 1e-3 * jnp.sum(jnp.where(slots["valid"], slack, 0.0)))
+
+    return jax.vmap(one)(prio_pop, sa_pop)
+
+
+@functools.partial(jax.jit, static_argnames=("env", "mcfg"))
+def _magma_generation(env, mcfg, key, state, slots, prio_pop, sa_pop, fit):
+    P, R = prio_pop.shape
+    ks = jax.random.split(key, 6)
+    # tournament selection (two parent sets)
+    def select(k):
+        idx = jax.random.randint(k, (P, mcfg.tournament), 0, P)
+        best = jnp.argmax(fit[idx], axis=1)
+        return idx[jnp.arange(P), best]
+    pa, pb = select(ks[0]), select(ks[1])
+    # uniform crossover
+    cx = jax.random.bernoulli(ks[2], 0.5, (P, R))
+    do_cx = jax.random.bernoulli(ks[3], mcfg.cx_prob, (P, 1))
+    prio_c = jnp.where(cx & do_cx, prio_pop[pa], prio_pop[pb])
+    sa_c = jnp.where(cx & do_cx, sa_pop[pa], sa_pop[pb])
+    # mutation: gaussian on priorities, random-reset on assignments
+    mut = jax.random.bernoulli(ks[4], mcfg.mut_prob, (P, R))
+    prio_m = jnp.clip(prio_c + mut * mcfg.mut_sigma
+                      * jax.random.normal(ks[4], (P, R)), -1.0, 1.0)
+    sa_m = jnp.where(jax.random.bernoulli(ks[5], mcfg.mut_prob, (P, R)),
+                     jax.random.randint(ks[5], (P, R), 0, env.num_sas),
+                     sa_c)
+    new_fit = _magma_fitness(env, state, slots, prio_m, sa_m)
+    # elitism: keep the best individual alive
+    best = jnp.argmax(fit)
+    worst = jnp.argmin(new_fit)
+    prio_m = prio_m.at[worst].set(prio_pop[best])
+    sa_m = sa_m.at[worst].set(sa_pop[best])
+    new_fit = new_fit.at[worst].set(fit[best])
+    return prio_m, sa_m, new_fit
+
+
+def magma(slots, state, env, mcfg: MagmaConfig = MagmaConfig(), key=None):
+    """GA search per scheduling period (paper: 100 gens x 100 individuals)."""
+    if key is None:
+        key = jax.random.PRNGKey(mcfg.seed)
+    R = env.cfg.max_rq
+    P = mcfg.population
+    k1, k2, key = jax.random.split(key, 3)
+    prio_pop = jax.random.uniform(k1, (P, R), minval=-1.0, maxval=1.0)
+    sa_pop = jax.random.randint(k2, (P, R), 0, env.num_sas)
+    # seed one individual with the Herald heuristic for faster convergence
+    _, hp, hs = herald(slots, state, env)
+    prio_pop = prio_pop.at[0].set(hp)
+    sa_pop = sa_pop.at[0].set(hs)
+    fit = _magma_fitness(env, state, slots, prio_pop, sa_pop)
+    for _ in range(mcfg.generations):
+        key, sub = jax.random.split(key)
+        prio_pop, sa_pop, fit = _magma_generation(
+            env, mcfg, sub, state, slots, prio_pop, sa_pop, fit)
+    best = jnp.argmax(fit)
+    prio, sa = prio_pop[best], sa_pop[best].astype(jnp.int32)
+    return _pack_actions(prio, sa, env.num_sas), prio, sa
+
+
+BASELINES = {"fcfs": fcfs_h, "prema": prema_h, "herald": herald}

@@ -1,0 +1,154 @@
+"""DDPG learner adapted to the RELMAS problem (paper Sec. 4.2).
+
+Standard Lillicrap-style DDPG — actor/critic + target twins, soft
+updates, replay — with the paper's adaptations:
+
+- both function approximators are the LSTM sequence nets of
+  ``repro.core.policy`` (state = variable-length ready queue);
+- the stored next state encodes the *residual* RQ only (the stochastic
+  arrivals are stripped by the environment before the transition is
+  written), restoring a deterministic causality chain;
+- actions are the full continuous (R, G) tanh outputs; exploration is
+  additive clipped Gaussian noise.
+
+The update step is a single jitted function; batches shard over the
+``data`` mesh axis when run under pjit (see launch/rl_train.py) — the
+policy itself is tiny (0.04% of an AlexNet) and is replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy as P
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    policy: P.PolicyConfig
+    gamma: float = 0.99          # RL discount (unstated in paper; standard)
+    tau: float = 0.005           # target soft-update rate
+    actor_lr: float = 1e-4
+    critic_lr: float = 1e-3
+    noise_sigma: float = 0.2
+    reward_scale: float = 0.1
+    grad_clip: float = 10.0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DDPGState:
+    actor: Params
+    critic: Params
+    target_actor: Params
+    target_critic: Params
+    actor_opt: Params            # adam moments
+    critic_opt: Params
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.actor, self.critic, self.target_actor,
+                 self.target_critic, self.actor_opt, self.critic_opt,
+                 self.step), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params)}
+
+
+def _adam_step(params, grads, opt, lr, step, clip):
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    t = step + 1
+    mh = jax.tree.map(lambda x: x / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda x: x / (1 - b2 ** t), v)
+    new = jax.tree.map(lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps),
+                       params, mh, vh)
+    return new, {"m": m, "v": v}
+
+
+def init_ddpg(key, cfg: DDPGConfig) -> DDPGState:
+    ka, kc = jax.random.split(key)
+    actor = P.init_actor(ka, cfg.policy)
+    critic = P.init_critic(kc, cfg.policy)
+    return DDPGState(
+        actor=actor, critic=critic,
+        target_actor=jax.tree.map(jnp.copy, actor),
+        target_critic=jax.tree.map(jnp.copy, critic),
+        actor_opt=_adam_init(actor), critic_opt=_adam_init(critic),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def act(params: Params, cfg: P.PolicyConfig, feats, mask, key=None,
+        sigma: float = 0.0):
+    """Single-state action. feats (T,F), mask (T,) -> (prio (T-1,), sa (T-1,))."""
+    a = P.actor_apply(params, cfg, feats, mask)
+    if key is not None and sigma > 0:
+        a = jnp.clip(a + sigma * jax.random.normal(key, a.shape), -1.0, 1.0)
+    prio = a[:, 0]
+    sa = jnp.argmax(a[:, 1:], axis=-1).astype(jnp.int32)
+    return a, prio, sa
+
+
+def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch) -> tuple["DDPGState", dict]:
+    """One DDPG update from a replay batch.
+
+    batch: dict with s (B,T,F), mask (B,T), a (B,T-1,G), r (B,),
+           s2 (B,T,F), mask2 (B,T).
+    """
+    pc = cfg.policy
+    bc_actor = jax.vmap(P.actor_apply, in_axes=(None, None, 0, 0))
+    bc_critic = jax.vmap(P.critic_apply, in_axes=(None, None, 0, 0, 0))
+
+    r = batch["r"] * cfg.reward_scale
+    a2 = bc_actor(state.target_actor, pc, batch["s2"], batch["mask2"])
+    q2 = bc_critic(state.target_critic, pc, batch["s2"], a2, batch["mask2"])
+    y = jax.lax.stop_gradient(r + cfg.gamma * q2)
+
+    def critic_loss(cp):
+        q = bc_critic(cp, pc, batch["s"], batch["a"], batch["mask"])
+        return jnp.mean((q - y) ** 2), q
+
+    (closs, q), cgrads = jax.value_and_grad(critic_loss, has_aux=True)(state.critic)
+    new_critic, new_copt = _adam_step(state.critic, cgrads, state.critic_opt,
+                                      cfg.critic_lr, state.step, cfg.grad_clip)
+
+    def actor_loss(ap):
+        a = bc_actor(ap, pc, batch["s"], batch["mask"])
+        return -jnp.mean(bc_critic(new_critic, pc, batch["s"], a, batch["mask"]))
+
+    aloss, agrads = jax.value_and_grad(actor_loss)(state.actor)
+    new_actor, new_aopt = _adam_step(state.actor, agrads, state.actor_opt,
+                                     cfg.actor_lr, state.step, cfg.grad_clip)
+
+    tau = cfg.tau
+    soft = lambda tgt, new: jax.tree.map(
+        lambda t_, n: (1 - tau) * t_ + tau * n, tgt, new)
+    new_state = DDPGState(
+        actor=new_actor, critic=new_critic,
+        target_actor=soft(state.target_actor, new_actor),
+        target_critic=soft(state.target_critic, new_critic),
+        actor_opt=new_aopt, critic_opt=new_copt,
+        step=state.step + 1,
+    )
+    info = {"critic_loss": closs, "actor_loss": aloss,
+            "q_mean": jnp.mean(q), "target_mean": jnp.mean(y)}
+    return new_state, info
+
+
+ddpg_update_jit = jax.jit(ddpg_update, static_argnames=("cfg",))

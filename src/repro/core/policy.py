@@ -1,0 +1,190 @@
+"""RELMAS actor / critic networks (paper Sec. 4.1, Fig. 2).
+
+Actor:  LSTM(hidden=h) -> FC(h -> h/2) + ReLU -> FC(h/2 -> G) + Tanh,
+        applied recurrently over the deadline-sorted ready queue, one
+        sub-job encoding (length F = 4 + 2M) per timestep, with a
+        *primer* virtual SJ (per-SA busy times) prepended.  Output per
+        SJ: [temporal priority, u_1 .. u_M]; argmax(u) = SA allocation.
+
+Critic: same architecture, input per timestep = concat(state, action)
+        (length F + G), projecting one Q value per timestep from the
+        hidden state; the Q of the pair is the last valid timestep's.
+
+Pure JAX: params are pytrees (dicts), apply functions are jit/vmap
+friendly and run the recurrence with ``jax.lax.scan``.  The Pallas
+kernel in ``repro.kernels.lstm_cell`` implements the same cell for the
+TPU hot path; ``use_pallas`` switches it in (numerics validated in
+tests against this reference path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    feat_dim: int          # F = 4 + 2M
+    act_dim: int           # G = 1 + M
+    hidden: int = 256      # paper default (Sec. 5: >=128 saturates)
+    use_pallas: bool = False
+    # §Perf H3: compute dtype of the LSTM recurrence (params stay f32);
+    # bf16 halves the HBM bytes of the weight-bound recurrent matmuls.
+    compute_dtype: str = "float32"
+
+    @property
+    def critic_in(self) -> int:
+        return self.feat_dim + self.act_dim
+
+
+def _dense_init(key, fan_in: int, fan_out: int):
+    scale = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, (fan_in, fan_out), jnp.float32, -scale, scale)
+
+
+def _lstm_init(key, in_dim: int, hidden: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    b = jnp.zeros((4 * hidden,), jnp.float32)
+    # forget-gate bias = 1 (standard LSTM trick for gradient flow)
+    b = b.at[hidden:2 * hidden].set(1.0)
+    return {
+        "wx": _dense_init(k1, in_dim, 4 * hidden),
+        "wh": _dense_init(k2, hidden, 4 * hidden),
+        "b": b,
+    }
+
+
+def init_actor(key, cfg: PolicyConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    h = cfg.hidden
+    return {
+        "lstm": _lstm_init(k1, cfg.feat_dim, h),
+        "fc1": {"w": _dense_init(k2, h, h // 2), "b": jnp.zeros((h // 2,))},
+        "fc2": {"w": _dense_init(k3, h // 2, cfg.act_dim),
+                "b": jnp.zeros((cfg.act_dim,))},
+    }
+
+
+def init_critic(key, cfg: PolicyConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    h = cfg.hidden
+    return {
+        "lstm": _lstm_init(k1, cfg.critic_in, h),
+        "fc1": {"w": _dense_init(k2, h, h // 2), "b": jnp.zeros((h // 2,))},
+        "fc2": {"w": _dense_init(k3, h // 2, 1), "b": jnp.zeros((1,))},
+    }
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Reference LSTM cell (the pure-jnp oracle for the Pallas kernel)."""
+    gates = x @ wx + h @ wh + b
+    hid = h.shape[-1]
+    i, f, g, o = (gates[..., :hid], gates[..., hid:2 * hid],
+                  gates[..., 2 * hid:3 * hid], gates[..., 3 * hid:])
+    c2 = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+    return h2, c2
+
+
+def _lstm_scan(p: Params, xs, mask, hidden: int, use_pallas: bool = False,
+               compute_dtype: str = "float32"):
+    """xs: (T, in), mask: (T,) -> hidden states (T, hidden).
+
+    Masked timesteps leave the carry untouched (padded tail slots).
+
+    §Perf H3 (DDPG-update roofline): the input projection ``xs @ Wx``
+    is hoisted out of the recurrence into ONE batched matmul — Wx is
+    read from HBM once per invocation instead of once per timestep.
+    The recurrent ``h @ Wh`` is inherently sequential and stays in the
+    scan; ``compute_dtype='bfloat16'`` halves its weight traffic
+    (master params stay f32; numerics validated in tests).
+    """
+    if use_pallas:
+        from repro.kernels.lstm_cell import ops as lstm_ops
+        cell = lstm_ops.lstm_cell
+
+        def step_pl(carry, inp):
+            h, c = carry
+            x, m = inp
+            h2, c2 = cell(x[None, :], h[None, :], c[None, :],
+                          p["wx"], p["wh"], p["b"])
+            h2, c2 = h2[0], c2[0]
+            return (jnp.where(m, h2, h), jnp.where(m, c2, c)), \
+                jnp.where(m, h2, h)
+
+        init = (jnp.zeros((hidden,), xs.dtype),
+                jnp.zeros((hidden,), xs.dtype))
+        _, hs = jax.lax.scan(step_pl, init, (xs, mask))
+        return hs
+
+    # NOTE (§Perf H3a, REFUTED): hoisting the input projection x@Wx out
+    # of the scan into one batched matmul *increased* per-step HLO bytes
+    # 29M -> 72M (saved (T,4H) xproj residuals + extra backward reads
+    # outweigh the tiny per-step Wx re-read) — see EXPERIMENTS.md §Perf.
+    # The per-step cell is kept; compute_dtype=bfloat16 (H3b) halves the
+    # weight-bound recurrent traffic instead.
+    dt = jnp.bfloat16 if compute_dtype == "bfloat16" else jnp.float32
+    wx, wh = p["wx"].astype(dt), p["wh"].astype(dt)
+    b = p["b"]
+
+    def step(carry, inp):
+        h, c = carry
+        x, m = inp
+        gates = (x.astype(dt) @ wx + h.astype(dt) @ wh).astype(
+            jnp.float32) + b
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c2 = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+        h2 = jnp.where(m, h2, h)
+        c2 = jnp.where(m, c2, c)
+        return (h2, c2), h2
+
+    init = (jnp.zeros((hidden,), jnp.float32),
+            jnp.zeros((hidden,), jnp.float32))
+    _, hs = jax.lax.scan(step, init, (xs, mask))
+    return hs.astype(xs.dtype)
+
+
+def actor_apply(params: Params, cfg: PolicyConfig, feats, mask):
+    """feats: (T, F) with primer at t=0; mask: (T,) bool.
+
+    Returns actions (T-1, G) in [-1, 1] (primer timestep discarded).
+    """
+    hs = _lstm_scan(params["lstm"], feats, mask, cfg.hidden, cfg.use_pallas,
+                    cfg.compute_dtype)
+    z = jax.nn.relu(hs @ params["fc1"]["w"] + params["fc1"]["b"])
+    a = jnp.tanh(z @ params["fc2"]["w"] + params["fc2"]["b"])
+    return a[1:]
+
+
+def critic_apply(params: Params, cfg: PolicyConfig, feats, actions, mask):
+    """feats: (T, F); actions: (T-1, G) (zero-padded to T with primer row).
+
+    Returns Q — the per-timestep projection at the last valid timestep.
+    """
+    act_full = jnp.concatenate(
+        [jnp.zeros((1, actions.shape[-1]), actions.dtype), actions], axis=0)
+    xs = jnp.concatenate([feats, act_full], axis=-1)
+    hs = _lstm_scan(params["lstm"], xs, mask, cfg.hidden, cfg.use_pallas,
+                    cfg.compute_dtype)
+    z = jax.nn.relu(hs @ params["fc1"]["w"] + params["fc1"]["b"])
+    q = (z @ params["fc2"]["w"] + params["fc2"]["b"])[:, 0]   # (T,)
+    last = jnp.maximum(jnp.sum(mask.astype(jnp.int32)) - 1, 0)
+    return q[last]
+
+
+def actor_macs_per_timestep(cfg: PolicyConfig) -> int:
+    """MAC count of one policy timestep (paper Sec. 5.3 overhead metric).
+
+    For h=256, F=16, G=7 (M=6 SAs) this gives 316,288 + small FC terms —
+    the paper quotes 316,288 MACs/layer for the LSTM+projections.
+    """
+    h = cfg.hidden
+    lstm = (cfg.feat_dim + h) * 4 * h
+    fc = h * (h // 2) + (h // 2) * cfg.act_dim
+    return lstm + fc

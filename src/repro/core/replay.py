@@ -1,0 +1,44 @@
+"""Experience replay buffer (paper Fig. 2.11).
+
+Host-side NumPy ring buffer for (s, a, r, s') tuples with fixed padded
+sequence length T (= 1 primer + max_rq sub-jobs).  ``s'`` is the
+residual-RQ-only encoding written by the environment (Sec. 4.2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, seq_len: int, feat_dim: int,
+                 act_dim: int, seed: int = 0):
+        self.capacity = capacity
+        T, F, G = seq_len, feat_dim, act_dim
+        self.s = np.zeros((capacity, T, F), np.float32)
+        self.mask = np.zeros((capacity, T), bool)
+        self.a = np.zeros((capacity, T - 1, G), np.float32)
+        self.r = np.zeros((capacity,), np.float32)
+        self.s2 = np.zeros((capacity, T, F), np.float32)
+        self.mask2 = np.zeros((capacity, T), bool)
+        self.size = 0
+        self.ptr = 0
+        self.rng = np.random.default_rng(seed)
+
+    def add(self, s, mask, a, r, s2, mask2):
+        i = self.ptr
+        self.s[i], self.mask[i], self.a[i] = s, mask, a
+        self.r[i], self.s2[i], self.mask2[i] = r, s2, mask2
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def add_batch(self, s, mask, a, r, s2, mask2):
+        for i in range(len(r)):
+            self.add(s[i], mask[i], a[i], r[i], s2[i], mask2[i])
+
+    def sample(self, batch_size: int) -> dict[str, np.ndarray]:
+        idx = self.rng.integers(0, self.size, size=batch_size)
+        return dict(s=self.s[idx], mask=self.mask[idx], a=self.a[idx],
+                    r=self.r[idx], s2=self.s2[idx], mask2=self.mask2[idx])
+
+    def __len__(self) -> int:
+        return self.size

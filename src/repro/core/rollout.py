@@ -1,0 +1,77 @@
+"""Episode rollout runners: evaluation + DDPG experience collection."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as P
+from repro.core.ddpg import DDPGConfig
+from repro.sim.env import SchedulingEnv
+
+
+def make_policy_period(env: SchedulingEnv, pcfg: P.PolicyConfig):
+    """Jitted one-period step with the RELMAS actor (exploration optional)."""
+
+    @functools.partial(jax.jit, static_argnames=("sigma",))
+    def period(params, state, trace, key, sigma: float = 0.0):
+        def act_fn(feats, mask, slots, st):
+            a = P.actor_apply(params, pcfg, feats, mask)
+            if sigma > 0.0:
+                a = jnp.clip(a + sigma * jax.random.normal(key, a.shape),
+                             -1.0, 1.0)
+            prio = a[:, 0]
+            sa = jnp.argmax(a[:, 1:], axis=-1).astype(jnp.int32)
+            return a, prio, sa
+        return env.period(state, trace, act_fn)
+
+    return period
+
+
+def make_baseline_period(env: SchedulingEnv, baseline_fn: Callable,
+                         jit: bool = True):
+    """One-period step with a heuristic baseline (acts on raw slot data)."""
+
+    def period(state, trace):
+        def act_fn(feats, mask, slots, st):
+            return baseline_fn(slots, st, env)
+        return env.period(state, trace, act_fn)
+
+    return jax.jit(period) if jit else period
+
+
+def run_episode(env: SchedulingEnv, period_fn, rng: np.random.Generator,
+                *, params=None, key=None, sigma: float = 0.0,
+                collect: bool = False):
+    """Run one episode. Returns (metrics, transitions|None)."""
+    trace, state = env.new_episode(rng)
+    transitions = [] if collect else None
+    for _ in range(env.cfg.periods):
+        if params is not None:
+            key, sub = jax.random.split(key)
+            state, trans, _ = period_fn(params, state, trace, sub, sigma=sigma)
+        else:
+            state, trans, _ = period_fn(state, trace)
+        if collect:
+            transitions.append(jax.tree.map(np.asarray, trans))
+    # final drop pass so late jobs are counted
+    state = env.mark_drops(state, trace, state["t"])
+    metrics = {k: float(v) for k, v in env.metrics(state, trace).items()}
+    return metrics, transitions
+
+
+def evaluate(env: SchedulingEnv, period_fn, seeds, *, params=None,
+             key=None) -> dict[str, float]:
+    """Mean metrics across episodes with different arrival traces."""
+    out: dict[str, list[float]] = {}
+    for s in seeds:
+        m, _ = run_episode(env, period_fn, np.random.default_rng(s),
+                           params=params,
+                           key=None if params is None else
+                           jax.random.PRNGKey(int(s)))
+        for k, v in m.items():
+            out.setdefault(k, []).append(v)
+    return {k: float(np.mean(v)) for k, v in out.items()}

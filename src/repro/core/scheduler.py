@@ -1,0 +1,31 @@
+"""Deployment-time RELMAS scheduler (paper Fig. 2a).
+
+Wraps trained actor parameters into the act-fn interface consumed by
+``SchedulingEnv.period`` — and by ``launch/serve.py`` for the
+multi-tenant serving loop.  Deterministic (no exploration noise).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy as P
+
+
+class RelmasScheduler:
+    def __init__(self, params, cfg: P.PolicyConfig):
+        self.params = params
+        self.cfg = cfg
+        self._act = jax.jit(self._act_impl)
+
+    def _act_impl(self, params, feats, mask):
+        a = P.actor_apply(params, self.cfg, feats, mask)
+        prio = a[:, 0]
+        sa = jnp.argmax(a[:, 1:], axis=-1).astype(jnp.int32)
+        return a, prio, sa
+
+    def __call__(self, feats, mask, *_unused):
+        return self._act(self.params, feats, mask)
+
+    def macs_per_timestep(self) -> int:
+        return P.actor_macs_per_timestep(self.cfg)

@@ -1,0 +1,25 @@
+"""Timeloop-like analytical cost model for heterogeneous sub-accelerators.
+
+The paper characterizes every (layer, sub-accelerator) pair with
+Timeloop/Accelergy and feeds the resulting latency / bandwidth / energy
+tables to the scheduler ("registration phase", Sec. 3).  This package
+re-implements that characterization analytically: a tiled-GEMM dataflow
+model with dataflow-specific stationarity (row-stationary Eyeriss-class
+vs weight-stationary Simba-class), buffer-capacity-driven refetch
+factors, and a roofline latency combine.  The tables it produces are the
+*inputs* of the scheduling problem, so scheduler behaviour is preserved
+even though absolute numbers differ from licensed Timeloop output.
+"""
+from repro.costmodel.accelerators import (
+    SAClass, EYERISS_SMALL, EYERISS_LARGE, SIMBA_SMALL, SIMBA_LARGE,
+    DEFAULT_MAS, MASConfig, layer_cost,
+)
+from repro.costmodel.layers import LayerSpec, conv2d, dwconv2d, fc, pool, gemm, elementwise
+from repro.costmodel.registry import ModelTable, register_model, Registry
+
+__all__ = [
+    "SAClass", "EYERISS_SMALL", "EYERISS_LARGE", "SIMBA_SMALL", "SIMBA_LARGE",
+    "DEFAULT_MAS", "MASConfig", "layer_cost",
+    "LayerSpec", "conv2d", "dwconv2d", "fc", "pool", "gemm", "elementwise",
+    "ModelTable", "register_model", "Registry",
+]

@@ -1,0 +1,4 @@
+"""Token data pipeline: deterministic, resumable, shard-aware."""
+from repro.data.pipeline import TokenPipeline, synthetic_batch
+
+__all__ = ["TokenPipeline", "synthetic_batch"]

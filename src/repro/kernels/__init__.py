@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as a triplet:
+  <name>/<name>.py — the ``pl.pallas_call`` kernel with explicit
+                     BlockSpec VMEM tiling (TPU target);
+  <name>/ops.py    — the jit'd public wrapper (shape plumbing, block
+                     selection, interpret-mode fallback on CPU);
+  <name>/ref.py    — the pure-jnp oracle used by tests and as the
+                     default path of the model stack on CPU.
+
+Kernels:
+  lstm_cell       — fused LSTM cell (RELMAS policy hot loop; the paper
+                    deploys the policy on a Simba SA — on TPU the cell
+                    is one fused VMEM-resident MXU kernel).
+  flash_attention — blocked causal/SWA/GQA attention (LM prefill).
+  decode_gqa      — single-token GQA attention vs a long KV cache.
+  ssd_chunk       — Mamba-2 SSD intra-chunk kernel (state-space dual).
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.decode_gqa import ops, ref
+from repro.kernels.decode_gqa.ops import decode_attention
+
+__all__ = ["ops", "ref", "decode_attention"]

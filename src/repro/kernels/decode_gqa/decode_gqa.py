@@ -1,0 +1,94 @@
+"""Single-token GQA decode attention — Pallas TPU kernel.
+
+Decode is bandwidth-bound: one query token per sequence must stream the
+whole KV cache from HBM. The kernel keeps the (1, D) query and the
+online-softmax statistics in VMEM while revisiting KV tiles, so the
+cache is read exactly once at full HBM bandwidth and nothing quadratic
+is ever materialized:
+
+  grid = (B, Hq, S/bk)  — kv tiles innermost.
+
+A per-batch ``length`` operand masks the unwritten cache tail (the
+serving path allocates the cache at max context and fills it
+incrementally). GQA via K/V index_map (same as flash_attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale: float, bk: int, nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+    k_start = ik * bk
+
+    @pl.when(k_start < length)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = kpos < length
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_pallas(q, k, v, length, *, block_k: int = 512,
+                            interpret: bool = False):
+    """q (B,Hq,1,D), k/v (B,Hkv,S,D), length (B,) -> (B,Hq,1,D)."""
+    B, Hq, _, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    bk = min(block_k, S)
+    nk = pl.cdiv(S, bk)
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k, v)

@@ -1,0 +1,29 @@
+"""Public wrapper for decode attention (pads S to the kv block)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_gqa.decode_gqa import decode_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, length, *, block_k: int = 512,
+                     interpret: bool | None = None):
+    """q (B,Hq,1,D), k/v (B,Hkv,S,D), length (B,) ints -> (B,Hq,1,D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    S = k.shape[2]
+    pad = (-S) % block_k if S > block_k else 0
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return decode_attention_pallas(q, k, v, length.astype(jnp.int32),
+                                   block_k=block_k,
+                                   interpret=bool(interpret))

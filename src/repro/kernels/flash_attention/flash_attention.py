@@ -1,0 +1,119 @@
+"""Blocked causal/SWA/GQA attention — Pallas TPU kernel (prefill path).
+
+Online-softmax (Flash) attention with explicit VMEM tiling:
+
+  grid = (B, Hq, S/bq, S/bk)   — kv blocks innermost, so the output
+  tile and the running (m, l, acc) statistics stay resident in VMEM
+  scratch while the kernel revisits kv tiles; HBM traffic is exactly
+  one pass over K/V per q-row-block plus one output write (the Flash
+  property, re-expressed in Pallas' revisiting-grid idiom).
+
+GQA folds into the K/V index_map (q-head h reads kv-head h // group);
+causal and sliding-window (Mixtral) masking are applied per tile, and
+whole out-of-window/future tiles are skipped with ``pl.when`` so SWA
+costs O(S * window) instead of O(S^2).
+
+MXU alignment: bq, bk multiples of 128 (S is padded by ops.py), D is
+the head dim (64/128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, causal: bool, window: int,
+                  bq: int, bk: int, nk: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # tile-level skip: entirely-future (causal) or entirely-out-of-window
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1
+    if window > 0:
+        # newest visible key for the oldest query in the tile:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window) \
+            if causal else run
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bk, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                                # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q (B,Hq,S,D), k/v (B,Hkv,S,D) -> (B,Hq,S,D). S % block == 0."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    nq, nk = pl.cdiv(S, bq), pl.cdiv(S, bk)
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            # f32 running statistics live in VMEM across kv revisits
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

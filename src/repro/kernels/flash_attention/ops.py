@@ -1,0 +1,38 @@
+"""Public wrapper: pads S to the block size, dispatches TPU kernel or
+interpret mode, exposed to the model stack via ``attention(..., impl=)``."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q (B,Hq,S,D), k/v (B,Hkv,S,D) -> (B,Hq,S,D), any S (padded here)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Hq, S, D = q.shape
+    pad = (-S) % max(block_q, block_k)
+    if pad:
+        # padded queries attend only to themselves (causal) and are sliced
+        # off; padded keys are masked by causality for all real queries.
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=bool(interpret))
+    return out[:, :, :S] if pad else out

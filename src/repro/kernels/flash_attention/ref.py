@@ -1,0 +1,81 @@
+"""Oracles for flash attention.
+
+- ``attention_naive``: materializes the full score matrix (small-S
+  ground truth for tests).
+- ``attention_chunked``: q-block-chunked online-softmax in pure jnp —
+  numerically identical algorithm to the kernel; this is the default
+  attention of the LM model stack (keeps 32k-prefill activation
+  memory bounded under jit, on any backend).
+
+Both support causal masking, sliding windows (Mixtral SWA) and GQA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k, hq):
+    hkv = k.shape[1]
+    if hq == hkv:
+        return k
+    return jnp.repeat(k, hq // hkv, axis=1)
+
+
+def attention_naive(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,Hq,S,D), k/v (B,Hkv,Sk,D) -> (B,Hq,S,D)."""
+    B, Hq, S, D = q.shape
+    Sk = k.shape[2]
+    k = _expand_kv(k, Hq)
+    v = _expand_kv(v, Hq)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (D ** 0.5)
+    qpos = jnp.arange(S)[:, None] + (Sk - S)   # align ends (decode-friendly)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((S, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q"))
+def attention_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                      block_q: int = 512):
+    """Flash-style chunked attention in pure jnp (scan over q blocks)."""
+    B, Hq, S, D = q.shape
+    k = _expand_kv(k, Hq)
+    v = _expand_kv(v, Hq)
+    bq = min(block_q, S)
+    nq = S // bq if S % bq == 0 else -1
+    if nq == -1:  # pad q to a multiple of bq
+        pad = (-S) % bq
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        nq = q.shape[2] // bq
+    qb = q.reshape(B, Hq, nq, bq, D).transpose(2, 0, 1, 3, 4)
+    kpos = jnp.arange(k.shape[2])
+
+    def one_block(i, qi):
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32),
+                       k.astype(jnp.float32)) / (D ** 0.5)
+        qpos = i * bq + jnp.arange(bq)[:, None]
+        mask = jnp.ones((bq, k.shape[2]), bool)
+        if causal:
+            mask &= qpos >= kpos[None, :]
+        if window > 0:
+            mask &= (qpos - kpos[None, :]) < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p,
+                          v.astype(jnp.float32)).astype(q.dtype)
+
+    out = jax.lax.map(lambda args: one_block(*args),
+                      (jnp.arange(nq), qb))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, Hq, nq * bq, D)
+    return out[:, :, :S]

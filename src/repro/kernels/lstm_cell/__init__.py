@@ -1,0 +1,4 @@
+from repro.kernels.lstm_cell import ops, ref
+from repro.kernels.lstm_cell.ops import lstm_cell
+
+__all__ = ["ops", "ref", "lstm_cell"]

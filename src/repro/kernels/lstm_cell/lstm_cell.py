@@ -1,0 +1,82 @@
+"""Fused LSTM cell — Pallas TPU kernel.
+
+The RELMAS policy executes one LSTM timestep per ready-queue sub-job
+(Sec. 4.1). The paper runs it on a Simba-small sub-accelerator; the
+TPU-native adaptation fuses the two gate GEMMs (x@Wx + h@Wh), the bias
+add and all four gate nonlinearities into a single VMEM-resident kernel
+so the (tiny) recurrent matmuls never round-trip through HBM between
+the MXU and the VPU epilogue.
+
+Tiling: grid (B/bm, H/bh). Weights are laid out (in_dim, 4, H) so one
+BlockSpec fetches the i/f/g/o columns of an H-tile together. The h@Wh
+contraction needs the full H as K, so `h` is blocked (bm, H) while `c`
+and the outputs are blocked (bm, bh). MXU alignment: bh is a multiple
+of 128; bm up to 128 (batch = RQ slots during training rollouts).
+
+VMEM per step (f32, bm=bh=128, H=256, F=16):
+  x 128x16 + h 128x256 + c 128x128 + Wx 16x4x128 + Wh 256x4x128
+  + out 2x128x128 ~= 0.9 MB  << 16 MB v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                 h2_ref, c2_ref):
+    x = x_ref[...]            # (bm, F)
+    h = h_ref[...]            # (bm, H)   full H: K-dim of the recurrent GEMM
+    c = c_ref[...]            # (bm, bh)
+    b = b_ref[...]            # (4, bh)
+
+    def gate(g):
+        acc = jnp.dot(x, wx_ref[:, g, :], preferred_element_type=jnp.float32)
+        acc += jnp.dot(h, wh_ref[:, g, :], preferred_element_type=jnp.float32)
+        return acc + b[g][None, :]
+
+    i = jax.nn.sigmoid(gate(0))
+    f = jax.nn.sigmoid(gate(1))
+    g = jnp.tanh(gate(2))
+    o = jax.nn.sigmoid(gate(3))
+    c2 = f * c + i * g
+    h2_ref[...] = (o * jnp.tanh(c2)).astype(h2_ref.dtype)
+    c2_ref[...] = c2.astype(c2_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_h", "interpret"))
+def lstm_cell_pallas(x, h, c, wx4, wh4, b4, *, block_b: int = 128,
+                     block_h: int = 128, interpret: bool = False):
+    """x (B,F), h (B,H), c (B,H); wx4 (F,4,H), wh4 (H,4,H), b4 (4,H).
+
+    Returns (h2, c2), each (B, H).
+    """
+    B, F = x.shape
+    H = h.shape[-1]
+    bm = min(block_b, B)
+    bh = min(block_h, H)
+    grid = (pl.cdiv(B, bm), pl.cdiv(H, bh))
+    out_shape = [jax.ShapeDtypeStruct((B, H), x.dtype),
+                 jax.ShapeDtypeStruct((B, H), x.dtype)]
+    h2, c2 = pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, F), lambda i, j: (i, 0)),          # x
+            pl.BlockSpec((bm, H), lambda i, j: (i, 0)),          # h (full K)
+            pl.BlockSpec((bm, bh), lambda i, j: (i, j)),         # c
+            pl.BlockSpec((F, 4, bh), lambda i, j: (0, 0, j)),    # Wx
+            pl.BlockSpec((H, 4, bh), lambda i, j: (0, 0, j)),    # Wh
+            pl.BlockSpec((4, bh), lambda i, j: (0, j)),          # b
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bh), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, h, c, wx4, wh4, b4)
+    return h2, c2

@@ -1,0 +1,37 @@
+"""Public jit'd wrapper for the fused LSTM cell.
+
+Handles the (F, 4H) -> (F, 4, H) weight re-layout expected by the
+kernel's BlockSpec and falls back to interpret mode off-TPU so the same
+call-site works everywhere (the model code switches via
+``PolicyConfig.use_pallas``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lstm_cell.lstm_cell import lstm_cell_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_h", "interpret"))
+def lstm_cell(x, h, c, wx, wh, b, *, block_b: int = 128, block_h: int = 128,
+              interpret: bool | None = None):
+    """Drop-in fused replacement for ref.lstm_cell_ref.
+
+    x (B,F), h (B,H), c (B,H), wx (F,4H), wh (H,4H), b (4H,) -> (h2, c2).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, F = x.shape
+    H = h.shape[-1]
+    wx4 = wx.reshape(F, 4, H)
+    wh4 = wh.reshape(H, 4, H)
+    b4 = b.reshape(4, H)
+    return lstm_cell_pallas(x, h, c, wx4, wh4, b4, block_b=block_b,
+                            block_h=block_h, interpret=bool(interpret))

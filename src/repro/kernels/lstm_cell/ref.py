@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused LSTM cell kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """x (B,F), h (B,H), c (B,H), wx (F,4H), wh (H,4H), b (4H,).
+
+    Gate order: i, f, g, o (matches repro.core.policy.lstm_cell_ref).
+    Returns (h2, c2).
+    """
+    gates = x @ wx + h @ wh + b
+    H = h.shape[-1]
+    i, f, g, o = (gates[..., :H], gates[..., H:2 * H],
+                  gates[..., 2 * H:3 * H], gates[..., 3 * H:])
+    c2 = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+    return h2, c2

@@ -1,0 +1,4 @@
+from repro.kernels.lstm_seq.ops import lstm_seq
+from repro.kernels.lstm_seq.ref import lstm_seq_ref
+
+__all__ = ["lstm_seq", "lstm_seq_ref"]

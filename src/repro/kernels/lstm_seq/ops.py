@@ -1,0 +1,28 @@
+"""Public wrapper: (F,4H)/(H,4H) weight re-layout + interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lstm_seq.lstm_seq import lstm_seq_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lstm_seq(xs, mask, wx, wh, b, *, block_b: int = 128,
+             interpret: bool | None = None):
+    """Fused-sequence LSTM. xs (T,B,F), mask (T,B), wx (F,4H), wh (H,4H),
+    b (4H,) -> hs (T,B,H).  Drop-in for the policy's scan loop."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    F = xs.shape[-1]
+    H = wh.shape[0]
+    wx4 = wx.reshape(F, 4, H)
+    wh4 = wh.reshape(H, 4, H)
+    b4 = b.reshape(4, H)
+    return lstm_seq_pallas(xs, mask, wx4, wh4, b4, block_b=block_b,
+                           interpret=bool(interpret))

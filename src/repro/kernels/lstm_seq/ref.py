@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused-sequence LSTM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_seq_ref(xs, mask, wx, wh, b):
+    """xs (T,B,F), mask (T,B); wx (F,4H), wh (H,4H), b (4H,) -> (T,B,H).
+
+    Identical semantics to ``policy._lstm_scan`` vmapped over batch:
+    masked steps leave the carry untouched; hs[t] is the post-mask h.
+    """
+    H = wh.shape[0]
+    B = xs.shape[1]
+
+    def step(carry, inp):
+        h, c = carry
+        x, m = inp
+        gates = x @ wx + h @ wh + b
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c2 = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+        m_ = m[:, None]
+        h2 = jnp.where(m_, h2, h)
+        c2 = jnp.where(m_, c2, c)
+        return (h2, c2), h2
+
+    init = (jnp.zeros((B, H), xs.dtype), jnp.zeros((B, H), xs.dtype))
+    _, hs = jax.lax.scan(step, init, (xs, mask))
+    return hs

@@ -1,0 +1,4 @@
+from repro.kernels.ssd_chunk import ops, ref
+from repro.kernels.ssd_chunk.ops import ssd_forward
+
+__all__ = ["ops", "ref", "ssd_forward"]

@@ -1,0 +1,70 @@
+"""Public SSD forward: Pallas intra-chunk kernel + jnp inter-chunk scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_intra_pallas
+from repro.kernels.ssd_chunk import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_forward(x, dt, A, Bm, Cm, init_state=None, *, chunk: int = 128,
+                interpret: bool | None = None):
+    """x (B,T,H,P), dt (B,T,H), A (H,), Bm/Cm (B,T,N).
+
+    Returns (y (B,T,H,P), final_state (B,H,N,P)). T is padded to the
+    chunk internally (dt=0 on padding -> identity state update).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // chunk
+
+    la = (dt * A[None, None, :]).reshape(B, nc, chunk, H)
+    cum = jnp.cumsum(la, axis=2)
+    xdt = (x * dt[..., None]).reshape(B, nc, chunk, H, P)
+    Bc = Bm.reshape(B, nc, chunk, N)
+    Cc = Cm.reshape(B, nc, chunk, N)
+
+    # ---- intra-chunk via the Pallas kernel (flatten batch x chunks) ----
+    cm_f = Cc.reshape(B * nc, chunk, N)
+    bm_f = Bc.reshape(B * nc, chunk, N)
+    xdt_f = xdt.transpose(0, 1, 3, 2, 4).reshape(B * nc, H, chunk, P)
+    cum_f = cum.transpose(0, 1, 3, 2).reshape(B * nc, H, chunk)
+    y_intra = ssd_intra_pallas(cm_f, bm_f, xdt_f, cum_f,
+                               interpret=bool(interpret))
+    y_intra = y_intra.reshape(B, nc, H, chunk, P).transpose(0, 1, 3, 2, 4)
+
+    # ---- inter-chunk state recurrence (linear, jnp) ----
+    decay_out = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))
+    chunk_state = jnp.einsum("bkjn,bkjh,bkjhp->bkhnp", Bc, decay_out, xdt)
+    total = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, None))
+    S0 = (jnp.zeros((B, H, N, P), jnp.float32) if init_state is None
+          else init_state)
+
+    def step(S, inp):
+        tot_k, cs_k = inp
+        return S * tot_k[:, :, None, None] + cs_k, S
+
+    Sfin, Sin = jax.lax.scan(step, S0, (total.transpose(1, 0, 2),
+                                        chunk_state.transpose(1, 0, 2, 3, 4)))
+    Sin = Sin.transpose(1, 0, 2, 3, 4)
+    decay_in = jnp.exp(jnp.clip(cum, -60.0, None))
+    y_inter = jnp.einsum("bkin,bkih,bkhnp->bkihp", Cc, decay_in, Sin)
+    y = (y_intra + y_inter).reshape(B, Tp, H, P)
+    return y[:, :T], Sfin

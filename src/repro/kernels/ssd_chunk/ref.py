@@ -1,0 +1,90 @@
+"""Oracles for the SSD kernel.
+
+- ``ssd_scan_ref``: exact sequential state recurrence (ground truth).
+- ``ssd_chunked_ref``: pure-jnp chunked SSD — algorithmically identical
+  to kernel + inter-chunk scan; default path of the Mamba-2 block.
+
+Shapes: x (B,T,H,P), dt (B,T,H) [positive], A (H,) [negative],
+Bm/Cm (B,T,N) shared across heads (G=1).  Returns (y (B,T,H,P),
+final_state (B,H,N,P)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, init_state=None):
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    a = jnp.exp(dt * A[None, None, :])                     # (B,T,H)
+    xdt = x * dt[..., None]                                # (B,T,H,P)
+    S0 = (jnp.zeros((B, H, N, P), jnp.float32) if init_state is None
+          else init_state)
+
+    def step(S, inp):
+        a_t, b_t, c_t, xdt_t = inp                          # (B,H) (B,N) ...
+        S = S * a_t[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", b_t, xdt_t)
+        y = jnp.einsum("bn,bhnp->bhp", c_t, S)
+        return S, y
+
+    inputs = (a.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+              Cm.transpose(1, 0, 2), xdt.transpose(1, 0, 2, 3))
+    S, ys = jax.lax.scan(step, S0, inputs)
+    return ys.transpose(1, 0, 2, 3), S
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked_ref(x, dt, A, Bm, Cm, init_state=None, *, chunk: int = 128):
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    assert T % chunk == 0, "ops.py pads T to the chunk size"
+    nc = T // chunk
+    la = (dt * A[None, None, :]).reshape(B, nc, chunk, H)   # log-decay
+    cum = jnp.cumsum(la, axis=2)                            # inclusive
+    xdt = (x * dt[..., None]).reshape(B, nc, chunk, H, P)
+    Bc = Bm.reshape(B, nc, chunk, N)
+    Cc = Cm.reshape(B, nc, chunk, N)
+
+    # ---- intra-chunk (the Pallas kernel computes exactly this) ----
+    s = jnp.einsum("bkin,bkjn->bkij", Cc, Bc)               # (B,nc,C,C)
+    ii = jnp.arange(chunk)[:, None]
+    jj = jnp.arange(chunk)[None, :]
+    diff = jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0)
+    L = jnp.where((ii >= jj)[None, None, :, :, None], jnp.exp(diff), 0.0)
+    y_intra = jnp.einsum("bkijh,bkjhp->bkihp", s[..., None] * L, xdt)
+
+    # ---- inter-chunk state recurrence ----
+    decay_out = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))
+    chunk_state = jnp.einsum("bkjn,bkjh,bkjhp->bkhnp", Bc, decay_out, xdt)
+    total = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, None))  # (B,nc,H)
+
+    S0 = (jnp.zeros((B, H, N, P), x.dtype) if init_state is None
+          else init_state)
+
+    def step(S, inp):
+        tot_k, cs_k = inp                                   # (B,H) (B,H,N,P)
+        S_out = S * tot_k[:, :, None, None] + cs_k
+        return S_out, S                                     # emit state *in*
+
+    (Sfin, Sin) = jax.lax.scan(
+        step, S0, (total.transpose(1, 0, 2),
+                   chunk_state.transpose(1, 0, 2, 3, 4)))
+    Sin = Sin.transpose(1, 0, 2, 3, 4)                      # (B,nc,H,N,P)
+    decay_in = jnp.exp(jnp.clip(cum, -60.0, None))          # (B,nc,C,H)
+    y_inter = jnp.einsum("bkin,bkih,bkhnp->bkihp", Cc, decay_in, Sin)
+    y = (y_intra + y_inter).reshape(B, T, H, P)
+    return y, Sfin
+
+
+def ssd_decode_step(state, x_t, dt_t, A, b_t, c_t):
+    """Single-token recurrence for serving. state (B,H,N,P), x_t (B,H,P),
+    dt_t (B,H), b_t/c_t (B,N) -> (new_state, y_t (B,H,P))."""
+    a_t = jnp.exp(dt_t * A[None, :])
+    state = state * a_t[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", b_t, x_t * dt_t[..., None])
+    y = jnp.einsum("bn,bhnp->bhp", c_t, state)
+    return state, y

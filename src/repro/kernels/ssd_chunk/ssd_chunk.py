@@ -1,0 +1,64 @@
+"""Mamba-2 SSD intra-chunk kernel — Pallas TPU.
+
+The state-space-duality algorithm (Dao & Gu 2024) splits the sequence
+into chunks: the *intra-chunk* term is a (C x C) masked-decay
+attention-like product — quadratic in the chunk length, MXU-friendly —
+while the *inter-chunk* state recurrence is linear and cheap (handled
+by ops.py with a jnp scan).  This kernel fuses the intra-chunk part:
+
+  S   = Cm @ Bm^T                      (C, C)  MXU
+  L   = tril(exp(cum_i - cum_j))       decay mask, VPU
+  Y   = (S * L) @ (dt * x)             (C, P)  MXU
+
+grid = (B * nchunks, H): B/C matrices are shared across heads within a
+group (G=1 here, the common Mamba-2 configuration), so Bm/Cm tiles are
+indexed by chunk only while x/dt/cum tiles are per-head.  Chunk length
+C and state size N are 128 — native MXU tiles; head dim P = 64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(cm_ref, bm_ref, xdt_ref, cum_ref, y_ref):
+    cm = cm_ref[0].astype(jnp.float32)       # (C, N)
+    bm = bm_ref[0].astype(jnp.float32)       # (C, N)
+    xdt = xdt_ref[0, 0].astype(jnp.float32)  # (C, P)
+    cum = cum_ref[0, 0].astype(jnp.float32)  # (C,)
+    C = cum.shape[0]
+    s = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)   # (C, C)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    # decay mask: exp(cum_i - cum_j) for i >= j, else 0. The difference is
+    # clamped before exp so padded/extreme dt cannot overflow f32.
+    diff = jnp.clip(cum[:, None] - cum[None, :], -60.0, 0.0)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    y = jnp.dot(s * L, xdt, preferred_element_type=jnp.float32)  # (C, P)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_pallas(cm, bm, xdt, cum, *, interpret: bool = False):
+    """cm/bm (BC, C, N), xdt (BC, H, C, P), cum (BC, H, C) -> y (BC, H, C, P).
+
+    BC = batch * nchunks (flattened); H heads share the B/C projections.
+    """
+    BC, C, N = cm.shape
+    H, P = xdt.shape[1], xdt.shape[3]
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(BC, H),
+        in_specs=[
+            pl.BlockSpec((1, C, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, C, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, 1, C, P), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, C), lambda i, h: (i, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C, P), lambda i, h: (i, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BC, H, C, P), xdt.dtype),
+        interpret=interpret,
+    )(cm, bm, xdt, cum)

@@ -1,0 +1,153 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``compiled.cost_analysis()`` provides HLO FLOPs / bytes of the
+*partitioned per-device* module.  Collective traffic is NOT in
+cost_analysis: we parse the post-SPMD HLO text and sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, converting to per-chip link traffic with ring-
+algorithm factors:
+
+  all-gather       (n-1)/n * Z      (Z = gathered result bytes)
+  all-reduce       2 (n-1)/n * Z    (reduce-scatter + all-gather)
+  reduce-scatter   (n-1)/n * Z * n  (Z = scattered result -> full = Z*n)
+  all-to-all       (n-1)/n * Z      (Z = per-chip payload)
+  collective-permute  Z
+
+Hardware constants (TPU v5e class, per assignment):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([\d,]+)\]<=\[")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every array shape in a result type (incl. tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        return dims[-1] if len(dims) > 1 else dims[0]
+    return default
+
+
+_TRAFFIC_FACTOR = {
+    # per-chip link bytes as a multiple of (result bytes), given group n
+    "all-gather": lambda z, n: z * (n - 1) / max(n, 1),
+    "all-reduce": lambda z, n: 2.0 * z * (n - 1) / max(n, 1),
+    "reduce-scatter": lambda z, n: z * (n - 1),
+    "all-to-all": lambda z, n: z * (n - 1) / max(n, 1),
+    "collective-permute": lambda z, n: float(z),
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_chip_bytes: float
+    by_op: dict[str, float]
+    counts: dict[str, int]
+
+    def to_dict(self):
+        return {"per_chip_bytes": self.per_chip_bytes, "by_op": self.by_op,
+                "counts": self.counts}
+
+
+def collective_stats(hlo_text: str, num_devices: int) -> CollectiveStats:
+    by_op: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        op = None
+        for cand in _COLL_OPS:
+            # match `bf16[...] all-gather(` and async `all-gather-start(`
+            if re.match(rf"(\(|\w+\[).*\s{cand}(-start)?\(", rhs):
+                op = cand
+                break
+        if op is None:
+            continue
+        if f"{op}-done" in rhs:
+            continue   # result of async pair already counted at -start
+        type_str = rhs.split(op)[0]
+        z = _shape_bytes(type_str)
+        if op == "all-gather" and "-start" in rhs:
+            # all-gather-start result tuple includes the operand; the
+            # gathered output is the larger entry — take max single shape
+            sizes = [_shape_bytes(f"{d}[{dd}]")
+                     for d, dd in _SHAPE_RE.findall(type_str)]
+            z = max(sizes) if sizes else z
+        n = _group_size(s, num_devices)
+        traffic = _TRAFFIC_FACTOR[op](z, n)
+        by_op[op] = by_op.get(op, 0.0) + traffic
+        counts[op] = counts.get(op, 0) + 1
+    return CollectiveStats(sum(by_op.values()), by_op, counts)
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats, num_devices: int,
+                   *, flops_are_per_device: bool = True) -> dict:
+    """Three roofline terms in seconds (per the assignment's formulas)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    if not flops_are_per_device:
+        flops /= num_devices
+        bytes_ /= num_devices
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll.per_chip_bytes / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_chip": flops, "bytes_per_chip": bytes_,
+        "collective_bytes_per_chip": coll.per_chip_bytes,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "collectives": coll.to_dict(),
+    }
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int | None = None) -> float:
+    """6·N·D train / 2·N·D inference FLOPs (N active for MoE)."""
+    n = n_active if n_active is not None else n_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch     # decode: one token per row

@@ -1,0 +1,162 @@
+"""RELMAS DDPG training driver (paper Sec. 4.2 / Sec. 5).
+
+Fault-tolerant training loop:
+- periodic atomic checkpoints (CheckpointManager) of the full learner
+  state (+ replay is re-warmed on restart, which is sound for an
+  off-policy learner);
+- ``--fail-at`` injects a crash for restart testing; on startup the
+  driver auto-resumes from the latest checkpoint;
+- data-parallel experience collection: episodes with different traces
+  are independent; with >1 device the replay batch shards over the
+  ``data`` axis (the policy is tiny and replicated — see DESIGN.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.rl_train --workload light \
+      --episodes 150 --hidden 64 --outdir runs/light_med
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.core import policy as P, ddpg as D
+from repro.core.replay import ReplayBuffer
+from repro.core.rollout import make_policy_period, run_episode, evaluate
+from repro.sim.arrivals import ArrivalConfig
+from repro.sim.env import EnvConfig, SchedulingEnv
+from repro.workloads import build_registry
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    workload: str = "light"
+    qos_level: str = "medium"
+    qos_factor: float = 3.0
+    load: float = 0.9
+    bandwidth_gbps: float = 16.0
+    t_s_us: float = 500.0
+    periods: int = 60
+    max_rq: int = 96
+    max_jobs: int = 64
+    hidden: int = 64
+    episodes: int = 150
+    updates_per_episode: int = 30
+    batch_size: int = 32
+    replay_capacity: int = 4000
+    warmup_episodes: int = 5
+    sigma0: float = 0.4
+    sigma_min: float = 0.05
+    sigma_decay: float = 0.97
+    eval_every: int = 10
+    eval_seeds: int = 5
+    seed: int = 0
+    outdir: str = "runs/relmas"
+    ckpt_every: int = 10
+    fail_at: int = -1          # crash injection (episode index) for FT tests
+
+
+def build_env(cfg: TrainConfig) -> SchedulingEnv:
+    reg = build_registry(cfg.workload)
+    ecfg = EnvConfig(t_s_us=cfg.t_s_us, periods=cfg.periods,
+                     max_rq=cfg.max_rq, max_jobs=cfg.max_jobs,
+                     bandwidth_gbps=cfg.bandwidth_gbps)
+    arr = ArrivalConfig(max_jobs=cfg.max_jobs, load=cfg.load,
+                        qos_factor=cfg.qos_factor, qos_level=cfg.qos_level,
+                        horizon_us=ecfg.horizon_us,
+                        slack_us=2.0 * cfg.t_s_us)
+    return SchedulingEnv(reg, ecfg, arr)
+
+
+def train(cfg: TrainConfig, log_fn=print) -> dict:
+    env = build_env(cfg)
+    pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
+                          hidden=cfg.hidden)
+    dcfg = D.DDPGConfig(policy=pcfg)
+    key = jax.random.PRNGKey(cfg.seed)
+    state = D.init_ddpg(key, dcfg)
+    mgr = CheckpointManager(os.path.join(cfg.outdir, "ckpt"))
+    start_ep = 0
+    if (step := mgr.latest_step()) is not None:      # auto-resume
+        state, step, meta = mgr.restore(state, step)
+        start_ep = meta.get("episode", 0) + 1
+        log_fn(f"[resume] restored checkpoint at episode {start_ep - 1}")
+
+    buf = ReplayBuffer(cfg.replay_capacity, env.seq_len, env.feat_dim,
+                       env.act_dim, seed=cfg.seed)
+    period_fn = make_policy_period(env, pcfg)
+    os.makedirs(cfg.outdir, exist_ok=True)
+    logf = open(os.path.join(cfg.outdir, "log.jsonl"), "a")
+    rng = np.random.default_rng(cfg.seed + 1000 * start_ep)
+    best = {"sla_rate": -1.0}
+    history = []
+    sigma = max(cfg.sigma_min, cfg.sigma0 * cfg.sigma_decay ** start_ep)
+
+    for ep in range(start_ep, cfg.episodes):
+        if ep == cfg.fail_at:
+            raise RuntimeError(f"injected failure at episode {ep}")
+        t0 = time.time()
+        key, sub = jax.random.split(key)
+        m, trans = run_episode(env, period_fn, rng, params=state.actor,
+                               key=sub, sigma=sigma, collect=True)
+        for tr in trans:
+            buf.add(tr["s"], tr["mask"], tr["a"], tr["r"], tr["s2"],
+                    tr["mask2"])
+        infos = []
+        if ep >= cfg.warmup_episodes:
+            for _ in range(cfg.updates_per_episode):
+                batch = {k: jnp.asarray(v)
+                         for k, v in buf.sample(cfg.batch_size).items()}
+                state, info = D.ddpg_update_jit(state, dcfg, batch)
+            infos.append(jax.tree.map(float, info))
+        sigma = max(cfg.sigma_min, sigma * cfg.sigma_decay)
+        rec = dict(episode=ep, sla=m["sla_rate"], sigma=round(sigma, 4),
+                   reward_train=m.get("reward", 0.0),
+                   secs=round(time.time() - t0, 2))
+        if infos:
+            rec.update({k: round(v, 5) for k, v in infos[-1].items()})
+        if (ep + 1) % cfg.eval_every == 0 or ep == cfg.episodes - 1:
+            ev = evaluate(env, period_fn, seeds=range(7000, 7000 + cfg.eval_seeds),
+                          params=state.actor, key=key)
+            rec["eval_sla"] = round(ev["sla_rate"], 4)
+            if ev["sla_rate"] > best["sla_rate"]:
+                best = {**ev, "episode": ep}
+                mgr_best = CheckpointManager(
+                    os.path.join(cfg.outdir, "best"), keep=1)
+                mgr_best.save(ep, state.actor,
+                              dict(episode=ep, sla=ev["sla_rate"],
+                                   hidden=cfg.hidden,
+                                   feat_dim=env.feat_dim,
+                                   act_dim=env.act_dim))
+        if (ep + 1) % cfg.ckpt_every == 0:
+            mgr.save(ep, state, dict(episode=ep))
+        logf.write(json.dumps(rec) + "\n")
+        logf.flush()
+        log_fn(f"[ep {ep:4d}] sla={m['sla_rate']:.3f} sigma={sigma:.3f} "
+               + (f"eval={rec.get('eval_sla')}" if "eval_sla" in rec else ""))
+        history.append(rec)
+    logf.close()
+    return dict(best=best, history=history, env=env, pcfg=pcfg, state=state)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    for f in dataclasses.fields(TrainConfig):
+        ap.add_argument(f"--{f.name.replace('_', '-')}", type=type(f.default),
+                        default=f.default)
+    args = ap.parse_args(argv)
+    cfg = TrainConfig(**vars(args))
+    print(f"RELMAS DDPG training: {cfg}")
+    out = train(cfg)
+    print(f"best eval: {out['best']}")
+
+
+if __name__ == "__main__":
+    main()

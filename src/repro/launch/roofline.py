@@ -1,0 +1,143 @@
+"""Roofline-term derivation from compiled cost modules.
+
+``HloCostAnalysis`` counts a ``while`` body ONCE, so the production
+step (scan-over-layers, q-block-chunked attention, grad-accumulation
+scan) under-reports FLOPs/bytes by the loop trip counts.  Verified
+empirically (see EXPERIMENTS.md §Roofline methodology): smoke-mixtral
+prefill reports exactly one layer x one q-block of compute.
+
+Fix: lower dedicated *cost modules* with every static loop unrolled
+(``scan_unroll=True``), attention in one q-block (``attn_block_q=inf``)
+and ``grad_accum=1``, at n_units = 1 and 2; every cost is affine in the
+unit count, so
+
+    total(U) = A + (U - 1) * (B - A)
+
+with U = n_layers (dense/moe/ssm), n_superblocks (jamba), or
+enc==dec layers (whisper).  The fixed part (embedding, LM head, loss)
+lives in A; the per-unit delta covers layer fwd+bwd, its optimizer
+update and its collectives.  Collective traffic is extrapolated per op
+type the same way.  The *production* module (rolled loops) is still
+what the dry-run compiles for memory analysis + compile-success — cost
+modules are AOT-only (nothing is ever allocated).
+
+The RELMAS DDPG cell extrapolates over the LSTM *timestep* count
+(T = ready-queue slots) instead of layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_arch
+from repro.launch import hlo_analysis as HA
+
+_COST_KEYS = ("flops", "bytes accessed", "transcendentals")
+
+
+def _unit_counts(cfg) -> tuple[int, int, int]:
+    """(units_total, la, lb): unit granularity for the A/B modules."""
+    if cfg.family == "hybrid":
+        u = cfg.attn_every
+        return cfg.n_layers // u, u, 2 * u
+    if cfg.family == "encdec":
+        assert cfg.enc_layers == cfg.n_layers, "extrapolation assumes 1:1"
+        return cfg.n_layers, 1, 2
+    return cfg.n_layers, 1, 2
+
+
+def _cost_cfg(cfg, n_layers: int):
+    kw = dict(n_layers=n_layers, scan_unroll=True, attn_block_q=1 << 30,
+              grad_accum=1)
+    if cfg.family == "encdec":
+        kw["enc_layers"] = n_layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def _measure(cfg, shape_name: str, mesh, overrides):
+    """Compile one cost module; return flat cost dict + collectives."""
+    from repro.launch.dryrun import lower_cfg_cell, _cost
+    lowered, _ = lower_cfg_cell(cfg, shape_name, mesh, overrides=overrides)
+    compiled = lowered.compile()
+    cost = _cost(compiled)
+    coll = HA.collective_stats(compiled.as_text(), mesh.size)
+    out = {k: float(cost.get(k, 0.0)) for k in _COST_KEYS}
+    for op, v in coll.by_op.items():
+        out[f"coll/{op}"] = v
+    return out
+
+
+def _affine_total(A: dict, Bv: dict, units: int) -> dict:
+    keys = set(A) | set(Bv)
+    return {k: A.get(k, 0.0) + (units - 1) * (Bv.get(k, 0.0) - A.get(k, 0.0))
+            for k in keys}
+
+
+def roofline_cell(arch: str, shape_name: str, mesh, *,
+                  overrides=None) -> dict:
+    """Accurate per-device roofline terms for one (arch, shape, mesh)."""
+    if arch == "relmas":
+        return _roofline_relmas(mesh)
+    cfg = get_arch(arch)
+    units, la, lb = _unit_counts(cfg)
+    A = _measure(_cost_cfg(cfg, la), shape_name, mesh, overrides)
+    Bv = _measure(_cost_cfg(cfg, lb), shape_name, mesh, overrides)
+    tot = _affine_total(A, Bv, units)
+    return _terms(tot, mesh.size, extras={"units": units, "A": A, "B": Bv})
+
+
+def _terms(tot: dict, n_dev: int, extras: dict | None = None) -> dict:
+    coll_bytes = sum(v for k, v in tot.items() if k.startswith("coll/"))
+    t_compute = tot.get("flops", 0.0) / HA.PEAK_FLOPS
+    t_memory = tot.get("bytes accessed", 0.0) / HA.HBM_BW
+    t_coll = coll_bytes / HA.ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    rec = {
+        "flops_per_chip": tot.get("flops", 0.0),
+        "bytes_per_chip": tot.get("bytes accessed", 0.0),
+        "collective_bytes_per_chip": coll_bytes,
+        "coll_by_op": {k[5:]: v for k, v in tot.items()
+                       if k.startswith("coll/")},
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "devices": n_dev,
+    }
+    if extras:
+        rec.update(extras)
+    return rec
+
+
+def _roofline_relmas(mesh) -> dict:
+    """DDPG update cost: extrapolate over LSTM timesteps T."""
+    from repro.launch.dryrun import _lower_relmas_T, _cost
+    res = {}
+    for T in (2, 3):
+        lowered = _lower_relmas_T(mesh, T=T)
+        compiled = lowered.compile()
+        cost = _cost(compiled)
+        coll = HA.collective_stats(compiled.as_text(), mesh.size)
+        out = {k: float(cost.get(k, 0.0)) for k in _COST_KEYS}
+        for op, v in coll.by_op.items():
+            out[f"coll/{op}"] = v
+        res[T] = out
+    T_full = 97                         # 96 RQ slots + primer
+    tot = _affine_total(res[2], res[3], T_full - 1)
+    return _terms(tot, mesh.size, extras={"units": T_full,
+                                          "A": res[2], "B": res[3]})
+
+
+def model_flops_entry(arch: str, shape_name: str) -> dict:
+    """6ND / 2ND reference FLOPs (global) for the useful-compute ratio."""
+    from repro.launch.dryrun import _n_params, _active_params
+    from repro.models.model import build_model
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total, _ = _n_params(params_s)
+    active = _active_params(cfg, params_s)
+    return {"n_params": total, "n_active": active,
+            "model_flops": HA.model_flops(cfg, SHAPES[shape_name], total,
+                                          active)}

@@ -1,0 +1,92 @@
+"""Multi-tenant serving driver (the paper's deployment scenario).
+
+Schedules DNN/LM inference requests on the heterogeneous MAS with the
+chosen policy and reports global + per-tenant SLA satisfaction.
+Tenants: the paper's CNN zoo (Table 2 workloads) and/or the 10 assigned
+LM architectures (llm_zoo layerization).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --workload mixed \
+      --policy relmas --ckpt runs/mixed_medium/best
+  PYTHONPATH=src python -m repro.launch.serve --workload lm_mixed \
+      --policy herald --episodes 3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.serving.service import MultiTenantService
+from repro.sim.arrivals import ArrivalConfig
+from repro.sim.env import EnvConfig
+from repro.workloads import build_registry, build_llm_registry, \
+    LM_WORKLOADS, WORKLOADS
+
+
+def build_service(args) -> MultiTenantService:
+    if args.workload in LM_WORKLOADS:
+        registry = build_llm_registry(args.workload, phase=args.phase,
+                                      seq=args.seq)
+        t_s = 2000.0                      # LM layer latencies are larger
+    else:
+        registry = build_registry(args.workload)
+        t_s = 500.0
+    ecfg = EnvConfig(t_s_us=args.t_s if args.t_s > 0 else t_s,
+                     periods=args.periods, max_rq=args.max_rq,
+                     max_jobs=args.max_jobs,
+                     bandwidth_gbps=args.bandwidth
+                     if args.bandwidth > 0 else registry.mas.dram_gbps)
+    arr = ArrivalConfig(max_jobs=args.max_jobs, load=args.load,
+                        qos_factor=args.qos_factor, qos_level=args.qos,
+                        horizon_us=ecfg.horizon_us, slack_us=2 * ecfg.t_s_us)
+    return MultiTenantService(registry, policy=args.policy,
+                              ckpt_dir=args.ckpt, hidden=args.hidden,
+                              env_cfg=ecfg, arrivals=arr)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="mixed",
+                    choices=list(WORKLOADS) + list(LM_WORKLOADS))
+    ap.add_argument("--policy", default="relmas",
+                    choices=["relmas", "fcfs", "prema", "herald"])
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--episodes", type=int, default=3)
+    ap.add_argument("--periods", type=int, default=60)
+    ap.add_argument("--qos", default="medium",
+                    choices=["high", "medium", "low"])
+    ap.add_argument("--qos-factor", type=float, default=3.0)
+    ap.add_argument("--load", type=float, default=0.9)
+    ap.add_argument("--bandwidth", type=float, default=-1.0)
+    ap.add_argument("--t-s", type=float, default=-1.0)
+    ap.add_argument("--max-rq", type=int, default=96)
+    ap.add_argument("--max-jobs", type=int, default=64)
+    ap.add_argument("--phase", default="decode",
+                    choices=["decode", "prefill"])
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    svc = build_service(args)
+    rates, energies = [], []
+    for ep in range(args.episodes):
+        m = svc.run_episode(seed=9000 + ep)
+        rates.append(m["sla_rate"])
+        energies.append(m["energy_uj"])
+        print(f"[serve ep {ep}] sla={m['sla_rate']:.3f} "
+              f"jobs={int(m['counted'])} energy={m['energy_uj']:.0f}uJ")
+        for tname, tm in m["per_tenant"].items():
+            if tm["jobs"]:
+                print(f"    {tname:>18s}: jobs={tm['jobs']:3d} "
+                      f"sla={tm['sla_rate']:.3f}")
+    out = {"policy": args.policy, "workload": args.workload,
+           "sla_rate_mean": float(np.mean(rates)),
+           "energy_uj_mean": float(np.mean(energies))}
+    print(json.dumps(out))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Composable LM model stack (the framework's schedulable tenants).
+
+Families: dense GQA decoders, MoE (Mixtral/OLMoE), SSM (Mamba-2),
+hybrid (Jamba), encoder-decoder (Whisper), VLM backbone (InternVL2).
+Pure JAX (init fns returning pytrees + apply fns), scan-over-layers,
+sharding via logical-axis rules, KV-cache/state serving path.
+"""
+from repro.models.model import build_model, param_count
+from repro.models.sharding import ShardingRules, make_rules
+
+__all__ = ["build_model", "param_count", "ShardingRules", "make_rules"]

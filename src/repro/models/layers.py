@@ -1,0 +1,229 @@
+"""Model building blocks: norms, RoPE, GQA attention, gated MLP.
+
+Conventions:
+- params are plain dicts; ``init_*`` return pytrees, ``*_fwd`` are pure.
+- every block takes ``ctx = (mesh, rules)`` (either may be None on CPU
+  smoke tests) and constrains its activations via logical axis names.
+- compute dtype follows the input; norm/softmax statistics are f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as shd
+from repro.kernels.flash_attention import ref as attn_ref
+from repro.kernels.decode_gqa import ref as dec_ref
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    mesh: Any = None
+    rules: Any = None
+
+    def shard(self, x, logical):
+        if self.mesh is None:
+            return x
+        return shd.shard(x, logical, self.mesh, self.rules)
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return truncated_normal(key, shape, fan_in ** -0.5, dtype)
+
+
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float = 10000.0):
+    """x (..., S, H, D) rotated at ``positions`` (..., S)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def attention_init(key, d, n_heads, n_kv, head_dim, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, n_heads, head_dim), dtype, d),
+        "wk": dense_init(ks[1], (d, n_kv, head_dim), dtype, d),
+        "wv": dense_init(ks[2], (d, n_kv, head_dim), dtype, d),
+        "wo": dense_init(ks[3], (n_heads, head_dim, d), dtype,
+                         n_heads * head_dim),
+    }
+
+
+def attention_fwd(p, x, ctx: Ctx, *, causal=True, window=0,
+                  rope_theta=10000.0, positions=None, use_rope=True,
+                  block_q=512):
+    """Full-sequence attention (training / prefill). x (B,S,d)."""
+    B, S, d = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if use_rope:
+        q, k = rope(q, positions, rope_theta), rope(k, positions, rope_theta)
+    q = ctx.shard(q.transpose(0, 2, 1, 3), ("batch", "model", None, None))
+    k = ctx.shard(k.transpose(0, 2, 1, 3), ("batch", "cache_kv", None, None))
+    v = ctx.shard(v.transpose(0, 2, 1, 3), ("batch", "cache_kv", None, None))
+    o = attn_ref.attention_chunked(q, k, v, causal=causal, window=window,
+                                   block_q=block_q)
+    o = o.transpose(0, 2, 1, 3)                                # (B,S,H,D)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return ctx.shard(out, ("batch", None, None)), (k, v)
+
+
+def attention_decode(p, x, cache, pos, ctx: Ctx, *, window=0,
+                     rope_theta=10000.0, use_rope=True,
+                     cache_update: str = "onehot"):
+    """One-token decode. x (B,1,d); cache dict(k,v (B,Hkv,Smax,D), len (B,)).
+
+    With a sliding window the cache is a ring buffer of size ``window``
+    (keys carry absolute-position RoPE before being written).
+
+    ``cache_update``:
+      - "onehot": masked elementwise update.  SPMD-friendly — the cache
+        keeps its (seq-)sharding with zero resharding collectives; costs
+        a full cache re-write of HBM traffic (§Perf iteration H2: the
+        scatter form made XLA *replicate* a seq-sharded cache, turning
+        one decode step collective-bound).
+      - "scatter": minimal-write per-row dynamic scatter (CPU serving
+        path / unsharded caches).
+    """
+    B = x.shape[0]
+    x = ctx.shard(x, (None, None, "dec_embed"))
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if use_rope:
+        q = rope(q, pos[:, None], rope_theta)
+        k = rope(k, pos[:, None], rope_theta)
+    Smax = cache["k"].shape[2]
+    slot = jnp.where(window > 0, pos % jnp.maximum(window, 1), pos)
+    slot = jnp.minimum(slot, Smax - 1)
+    kt = k[:, 0].astype(cache["k"].dtype)            # (B, Hkv, D)
+    vt = v[:, 0].astype(cache["v"].dtype)
+    if cache_update == "onehot":
+        hit = (jax.lax.broadcasted_iota(jnp.int32, (B, 1, Smax, 1), 2)
+               == slot[:, None, None, None])         # (B,1,Smax,1)
+        kn = jnp.where(hit, kt[:, :, None, :], cache["k"])
+        vn = jnp.where(hit, vt[:, :, None, :], cache["v"])
+    else:
+        kn = cache["k"].at[jnp.arange(B), :, slot].set(kt)
+        vn = cache["v"].at[jnp.arange(B), :, slot].set(vt)
+    kn = ctx.shard(kn, ("batch", "cache_kv", "cache_seq", None))
+    vn = ctx.shard(vn, ("batch", "cache_kv", "cache_seq", None))
+    length = jnp.minimum(pos + 1, Smax)
+    o = dec_ref.decode_attention_ref(q.transpose(0, 2, 1, 3), kn, vn, length)
+    # §Perf H2e: co-shard o's head dim with wo's ("heads" -> model) so
+    # the output projection contracts locally + psums a KB-scale
+    # partial, instead of all-gathering the (H,D,d) weight.
+    o = ctx.shard(o, (None, "heads", None, None))
+    o = o.transpose(0, 2, 1, 3)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": kn, "v": vn}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (Whisper decoder): queries from the token stream, keys/
+# values from the (fixed) encoder output.  No RoPE — positions enter via
+# sinusoidal embeddings added at the stack level, as in Whisper.
+# ---------------------------------------------------------------------------
+def cross_attention_fwd(p, x, enc_kv, ctx: Ctx):
+    """x (B,S,d); enc_kv = (k, v) each (B,Hkv,Se,D). Non-causal."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).transpose(0, 2, 1, 3)
+    q = ctx.shard(q, ("batch", "model", None, None))
+    k, v = enc_kv
+    o = attn_ref.attention_chunked(q, k, v, causal=False)
+    o = o.transpose(0, 2, 1, 3)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return ctx.shard(out, ("batch", None, None))
+
+
+def cross_kv(p, enc_out, ctx: Ctx):
+    """Precompute the cross-attention K/V from encoder output (B,Se,d)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"]).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"]).transpose(0, 2, 1, 3)
+    k = ctx.shard(k, ("batch", "cache_kv", None, None))
+    v = ctx.shard(v, ("batch", "cache_kv", None, None))
+    return k, v
+
+
+def cross_attention_decode(p, x, cross_cache, ctx: Ctx):
+    """One-token cross attention vs the fixed encoder K/V cache."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).transpose(0, 2, 1, 3)
+    k, v = cross_cache["k"], cross_cache["v"]
+    Se = k.shape[2]
+    o = dec_ref.decode_attention_ref(q, k, v, jnp.full((B,), Se, jnp.int32))
+    o = o.transpose(0, 2, 1, 3)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+def embedding_init(key, vocab: int, d: int, dtype):
+    return truncated_normal(key, (vocab, d), d ** -0.5, dtype)
+
+
+def sinusoidal_positions(S: int, d: int, dtype=jnp.float32):
+    """Whisper-style fixed sinusoidal position embeddings (S, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = jnp.arange(S)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SiLU) / GELU MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, d, f, dtype, gated=True):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, f), dtype),
+         "w_down": dense_init(ks[1], (f, d), dtype, f)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, f), dtype)
+    return p
+
+
+def mlp_fwd(p, x, ctx: Ctx):
+    x = ctx.shard(x, (None,) * (x.ndim - 1) + ("dec_embed",))
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = ctx.shard(h, ("batch", None, "model"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return ctx.shard(out, ("batch", None, None))

@@ -1,0 +1,208 @@
+"""Top-level composable LM: embeddings -> family stack -> head.
+
+One class serves all 10 assigned architectures; the family field of the
+``ArchConfig`` dispatches the stack:
+
+  dense / moe  -> decoder-only transformer (GQA [+ SWA], MLP or MoE FFN)
+  ssm          -> Mamba-2 (SSD) blocks, attention-free
+  hybrid       -> Jamba-style 1:attn / 7:mamba super-blocks (+ MoE)
+  encdec       -> Whisper-class encoder-decoder (audio frontend stubbed)
+  vlm          -> InternVL2-class: projected patch-embedding prefix
+                  (vision tower stubbed) + dense decoder
+
+API (all pure functions of explicit params):
+  init(key)                           -> params
+  forward(params, batch, ctx)         -> (logits (B,S,Vp), aux)   [train]
+  prefill(params, batch, ctx)         -> (last logits (B,Vp), cache)
+  decode_step(params, cache, batch, ctx) -> (logits (B,Vp), cache)
+  init_cache(B, smax, dtype)          -> cache pytree
+
+``batch`` keys: tokens (B,S) int32; frames (B,n_frames,d) [encdec];
+patches (B,n_patches,vit_dim) [vlm]; token (B,1) + pos (B,) [decode].
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as ED
+from repro.models import layers as L
+from repro.models import ssm as SSM
+from repro.models import transformer as T
+from repro.models.layers import Ctx
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        ks = jax.random.split(key, 4)
+        params = {
+            "embed": L.embedding_init(ks[0], cfg.vocab_padded, cfg.d_model,
+                                      dt),
+            "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(
+                ks[1], (cfg.d_model, cfg.vocab_padded), dt)
+        if cfg.family == "encdec":
+            params.update(ED.encdec_init(ks[2], cfg, dt))
+        elif cfg.family == "hybrid":
+            params["stack"] = T.hybrid_init(ks[2], cfg, dt)
+        else:
+            params["stack"] = T.stack_init(ks[2], cfg, dt)
+        if cfg.family == "vlm":
+            params["patch_proj"] = L.dense_init(
+                ks[3], (cfg.vit_dim, cfg.d_model), dt)
+        return params
+
+    # ------------------------------------------------------------- embedding
+    def _embed(self, params, tokens, ctx: Ctx):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return ctx.shard(x, ("batch", None, None))
+
+    def _head(self, params, x, ctx: Ctx):
+        x = L.rmsnorm(params["final_norm"], x)
+        if x.ndim == 2:                         # decode: (B, d)
+            x = ctx.shard(x, (None, "dec_embed"))
+        if self.cfg.tie_embeddings:
+            logits = jnp.einsum("...d,vd->...v", x, params["embed"])
+        else:
+            logits = jnp.einsum("...d,dv->...v", x, params["lm_head"])
+        logical = ("batch",) + (None,) * (logits.ndim - 2) + ("vocab",)
+        return ctx.shard(logits, logical)
+
+    def _prefix(self, params, batch, ctx: Ctx):
+        """VLM: projected patch prefix + text embeddings, total length S."""
+        patches = batch["patches"].astype(params["embed"].dtype)
+        prefix = jnp.einsum("bpe,ed->bpd", patches, params["patch_proj"])
+        x_txt = self._embed(params, batch["tokens"], ctx)
+        return jnp.concatenate([prefix, x_txt], axis=1)
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch, ctx: Ctx):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = ED.encode(params, batch["frames"].astype(
+                params["embed"].dtype), ctx, cfg)
+            x = self._embed(params, batch["tokens"], ctx)
+            x, _ = ED.decode_fwd(params, x, enc_out, ctx, cfg)
+            return self._head(params, x, ctx), jnp.zeros((), jnp.float32)
+        if cfg.family == "vlm":
+            x = self._prefix(params, batch, ctx)
+        else:
+            x = self._embed(params, batch["tokens"], ctx)
+        fwd = T.hybrid_fwd if cfg.family == "hybrid" else T.stack_fwd
+        x, _, aux = fwd(params["stack"], x, ctx, cfg)
+        return self._head(params, x, ctx), aux
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, batch, ctx: Ctx, *, pad_to: int | None = None):
+        """``pad_to``: grow attention caches to this many seq slots so
+        decode can append (production preallocates via init_cache; the
+        dry-run prefill cells lower the unpadded exact-S variant)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = ED.encode(params, batch["frames"].astype(
+                params["embed"].dtype), ctx, cfg)
+            x = self._embed(params, batch["tokens"], ctx)
+            x, cache = ED.decode_fwd(params, x, enc_out, ctx, cfg,
+                                     collect_cache=True)
+        else:
+            if cfg.family == "vlm":
+                x = self._prefix(params, batch, ctx)
+            else:
+                x = self._embed(params, batch["tokens"], ctx)
+            fwd = T.hybrid_fwd if cfg.family == "hybrid" else T.stack_fwd
+            x, cache, _ = fwd(params["stack"], x, ctx, cfg,
+                              collect_cache=True)
+        logits = self._head(params, x[:, -1], ctx)
+        if pad_to is not None:
+            cache = _pad_cache_seq(cache, pad_to)
+        return logits, cache
+
+    # ----------------------------------------------------------- decode step
+    def decode_step(self, params, cache, batch, ctx: Ctx):
+        cfg = self.cfg
+        x = self._embed(params, batch["token"], ctx)   # (B,1,d)
+        pos = batch["pos"]
+        if cfg.family == "encdec":
+            x, cache = ED.decode_step(params, cache, x, pos, ctx, cfg)
+        elif cfg.family == "hybrid":
+            x, cache = T.hybrid_decode(params["stack"], cache, x, pos, ctx,
+                                       cfg)
+        else:
+            x, cache = T.stack_decode(params["stack"], cache, x, pos, ctx,
+                                      cfg)
+        logits = self._head(params, x[:, 0], ctx)
+        return logits, cache
+
+    # ------------------------------------------------------------ init_cache
+    def init_cache(self, B: int, smax: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return ED.init_cache(cfg, B, smax, dtype)
+        if cfg.window > 0:
+            smax = min(smax, cfg.window)   # SWA ring buffer (Mixtral)
+
+        def attn_cache(n):
+            z = lambda *s: jnp.zeros(s, dtype)
+            return {"k": z(n, B, cfg.n_kv, smax, cfg.head_dim),
+                    "v": z(n, B, cfg.n_kv, smax, cfg.head_dim)}
+
+        def ssm_cache(n):
+            H = cfg.n_ssm_heads
+            conv_dim = cfg.ssm_expand * cfg.d_model + 2 * cfg.ssm_state
+            return {"ssm": jnp.zeros((n, B, H, cfg.ssm_state,
+                                      cfg.ssm_headdim), jnp.float32),
+                    "conv": jnp.zeros((n, B, cfg.ssm_conv - 1, conv_dim),
+                                      dtype)}
+
+        if cfg.family == "ssm":
+            return ssm_cache(cfg.n_layers)
+        if cfg.family == "hybrid":
+            nsb = cfg.n_layers // cfg.attn_every
+            layout = T._sb_layout(cfg)
+            return {f"l{i}": (attn_cache(nsb) if mixer == "attn"
+                              else ssm_cache(nsb))
+                    for i, (mixer, _) in enumerate(layout)}
+        return attn_cache(cfg.n_layers)
+
+
+def _pad_cache_seq(cache, smax: int):
+    """Zero-pad k/v cache leaves (stacked (L,B,H,S,D)) to ``smax`` slots.
+
+    Cross-attention caches (Whisper encoder K/V) are fixed-size and
+    skipped; SSM/conv states have no seq dim and are untouched.
+    """
+    def one(path, x):
+        ks = "/".join(str(getattr(k, "key", k)) for k in path)
+        if ks.split("/")[-1] not in ("k", "v") or "cross" in ks:
+            return x
+        S = x.shape[3]
+        if S >= smax:
+            return x
+        pad = [(0, 0)] * x.ndim
+        pad[3] = (0, smax - S)
+        return jnp.pad(x, pad)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def build_model(cfg: ArchConfig) -> LM:
+    return LM(cfg)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

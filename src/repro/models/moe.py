@@ -1,0 +1,98 @@
+"""Mixture-of-Experts FFN with grouped sort-based capacity dispatch.
+
+Sharding-aware design (see DESIGN.md §5): tokens are processed in
+*groups* (one group = one sequence), so the argsort/scatter dispatch is
+independent per group — under GSPMD the (G, ...) group dim is sharded
+over the data axis and dispatch compiles to purely local ops, never a
+global (1M-token) sort.  Expert weights are (E, d, f) with d sharded
+over ``fsdp`` and f over ``model`` like a dense MLP; the expert einsum
+all-gathers weights (FSDP) exactly as a dense layer would.
+
+Capacity: ``C = round_up(cf * Sg * k / E)``; overflowing assignments
+are dropped (standard Switch-style drop — the residual connection
+carries those tokens).  Router: softmax over top-k logits (Mixtral),
+with an auxiliary load-balancing loss returned for the trainer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Ctx, dense_init
+
+
+def moe_init(key, d, f, n_experts, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, n_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (n_experts, d, f), dtype, d),
+        "w_up": dense_init(ks[2], (n_experts, d, f), dtype, d),
+        "w_down": dense_init(ks[3], (n_experts, f, d), dtype, f),
+    }
+
+
+def _group_dispatch(xg, eidx, gates, n_experts: int, capacity: int):
+    """Per-group dispatch. xg (Sg,d), eidx/gates (Sg,k).
+
+    Returns slots (E*C, d), combine metadata (slot_of_assign, order, tok).
+    """
+    Sg, d = xg.shape
+    k = eidx.shape[-1]
+    ef = eidx.reshape(-1)
+    tok = jnp.arange(Sg * k) // k
+    order = jnp.argsort(ef)                       # local sort (Sg*k,)
+    se = ef[order]
+    starts = jnp.searchsorted(se, jnp.arange(n_experts))
+    pos = jnp.arange(Sg * k) - starts[se]
+    slot = jnp.where(pos < capacity, se * capacity + pos,
+                     n_experts * capacity)        # sentinel row
+    slots = jnp.zeros((n_experts * capacity + 1, d), xg.dtype)
+    slots = slots.at[slot].set(xg[tok[order]])
+    return slots[:-1], (slot, order, tok)
+
+
+def _group_combine(y_slots, meta, gates, Sg: int):
+    """y_slots (E*C, d) -> (Sg, d) weighted by gates."""
+    slot, order, tok = meta
+    k = gates.shape[-1]
+    gf = gates.reshape(-1)[order]
+    y_pad = jnp.concatenate([y_slots, jnp.zeros_like(y_slots[:1])], axis=0)
+    val = y_pad[slot] * gf[:, None]
+    out = jnp.zeros((Sg, y_slots.shape[-1]), y_slots.dtype)
+    return out.at[tok[order]].add(val)
+
+
+@functools.partial(jax.named_call, name="moe_ffn")
+def moe_fwd(p, x, ctx: Ctx, *, top_k: int, capacity_factor: float = 1.25):
+    """x (B,S,d) -> (out (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E = p["router"].shape[-1]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    top_gates, top_idx = jax.lax.top_k(logits, top_k)      # (B,S,k)
+    top_gates = jax.nn.softmax(top_gates, axis=-1).astype(x.dtype)
+    # load-balance auxiliary (Switch): E * sum(frac_tokens * frac_prob)
+    me = jnp.mean(gates_all, axis=(0, 1))
+    ce = jnp.mean(
+        (jax.nn.one_hot(top_idx[..., 0], E)), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    C = int(capacity_factor * S * top_k / E) + 1
+    C = -(-C // 8) * 8                                      # round up to 8
+
+    disp = jax.vmap(lambda xg, eg, gg: _group_dispatch(xg, eg, gg, E, C))
+    slots, meta = disp(x, top_idx, top_gates)               # (B, E*C, d)
+    slots = slots.reshape(B, E, C, d)
+    slots = ctx.shard(slots, ("batch", None, None, None))
+    h = jnp.einsum("becd,edf->becf", slots, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", slots, p["w_up"])
+    h = jax.nn.silu(h) * u
+    h = ctx.shard(h, ("batch", None, None, "model"))
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    y = ctx.shard(y, ("batch", None, None, None))
+
+    comb = jax.vmap(lambda ys, mt, gg: _group_combine(ys, mt, gg, S))
+    out = comb(y.reshape(B, E * C, d), meta, top_gates)
+    return ctx.shard(out, ("batch", None, None)), aux

@@ -1,0 +1,155 @@
+"""Parameter / cache / optimizer partitioning for AOT lowering.
+
+``jax.jit(..., in_shardings=...)`` needs a NamedSharding per pytree
+leaf.  Rather than threading logical annotations through every init
+function, leaves are classified by their *key path* (params are plain
+nested dicts with stable, descriptive keys) plus rank: stacked
+(scan-over-layers) parameters carry one extra leading dim which maps to
+``None`` (layers are never sharded — pipeline parallelism would change
+this; see DESIGN.md §5).
+
+The same classification feeds three consumers:
+  - ``param_shardings``      — in/out shardings for train/serve steps,
+  - ``cache_shardings``      — decode caches (kv-head TP with sequence-
+                               sharding fallback, see sharding.py),
+  - ``opt_shardings``        — optimizer moments follow their parameter.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import sharding as shd
+
+# (key regex, logical axes for the *unstacked* parameter, by rank)
+_PARAM_RULES: tuple[tuple[str, dict[int, tuple]], ...] = (
+    (r"embed$",        {2: ("vocab", "fsdp")}),
+    (r"lm_head$",      {2: ("fsdp", "vocab")}),
+    (r"patch_proj$",   {2: (None, "fsdp")}),
+    (r"wq$",           {3: ("fsdp", "heads", None)}),
+    (r"w[kv]$",        {3: ("fsdp", "kv_heads", None)}),
+    (r"wo$",           {3: ("heads", None, "fsdp")}),
+    (r"router$",       {2: ("fsdp", None)}),
+    # NOTE rank keys: stacked params add a leading layer dim, so rank-3
+    # MLP weights are STACKED-DENSE (L,d,f) — the MoE expert rule only
+    # applies at rank 4 (L,E,d,f).  Listing rank 3 under the expert rule
+    # would shard the *layer* dim whenever n_layers divides the mesh
+    # axis (regression-tested in test_partition.py).
+    (r"w_(gate|up)$",  {2: ("fsdp", "mlp"),                    # dense MLP
+                        4: (None, "expert", "fsdp", "mlp")}),  # MoE stacked
+    (r"w_down$",       {2: ("mlp", "fsdp"),
+                        4: (None, "expert", "mlp", "fsdp")}),
+    (r"w_in$",         {2: ("fsdp", "model")}),        # ssm in-proj (packed)
+    (r"w_out$",        {2: ("model", "fsdp")}),        # ssm out-proj
+    (r"conv_w$",       {2: (None, "model")}),
+    (r"(A_log|dt_bias|D)$", {1: ("ssm_heads",)}),
+    (r"(scale|b|bias)$",    {1: (None,)}),
+)
+
+_CACHE_RULES: tuple[tuple[str, dict[int, tuple]], ...] = (
+    (r"[kv]$",    {4: ("batch", "cache_kv", "cache_seq", None)}),
+    (r"ssm$",     {4: ("batch", "ssm_heads", None, None)}),
+    (r"conv$",    {3: ("batch", None, "model")}),
+)
+
+
+def _keystr(path) -> str:
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _classify(path, ndim: int, rules, strip_state: bool = True) -> tuple:
+    """Logical axes for a leaf, padding leading dims with None (stacking).
+
+    Optimizer-state leaves nest *inside* the parameter key (adafactor:
+    ``.../wq/v_row``); the trailing state component is stripped so the
+    parent parameter's rule applies, with factored rows/cols dropping
+    the factored-away logical dim (v_row loses the last dim, v_col the
+    second-to-last).  Without this, adafactor state lowers REPLICATED —
+    gigabytes per chip on the 405B config (regression-tested).
+    """
+    ks = _keystr(path)
+    parts = ks.split("/")
+    # NOTE: only parameter/optimizer trees strip state suffixes — cache
+    # trees have a leaf literally named "v" (the value cache) which must
+    # match the cache rule, not be treated as an adafactor moment
+    # (regression-tested: a stripped "v" lowered the V-cache REPLICATED,
+    # ~1 TB/chip on llama3-405b decode).
+    suffix = parts[-1] if strip_state and parts[-1] in (
+        "m", "v", "v_row", "v_col", "res") else None
+    if suffix:
+        ks = "/".join(parts[:-1])
+    for pat, by_rank in rules:
+        if re.search(pat, ks):
+            ranks = sorted(by_rank, reverse=True)
+            if suffix in ("v_row", "v_col"):
+                # parent rank = ndim + 1 (one dim factored away)
+                for r in ranks:
+                    if ndim + 1 >= r:
+                        base = list(by_rank[r])
+                        base = base[:-1] if suffix == "v_row" else \
+                            base[:-2] + base[-1:]
+                        return (None,) * (ndim - len(base)) + tuple(base)
+                break
+            for r in ranks:
+                if ndim >= r:
+                    base = by_rank[r]
+                    return (None,) * (ndim - r) + tuple(base)
+    return (None,) * ndim
+
+
+def logical_axes(tree, *, rules=_PARAM_RULES):
+    """Pytree of logical-axis tuples mirroring ``tree`` (shape leaves ok)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: _classify(p, len(x.shape), rules), tree)
+
+
+def tree_shardings(tree, mesh: Mesh, rules: shd.ShardingRules,
+                   *, kind: str = "param"):
+    """NamedSharding per leaf. ``tree`` leaves need only ``.shape``."""
+    table = _PARAM_RULES if kind == "param" else _CACHE_RULES
+
+    def one(path, x):
+        logical = _classify(path, len(x.shape), table,
+                            strip_state=(kind == "param"))
+        spec = shd.logical_spec(tuple(x.shape), logical, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def param_shardings(params_shape, mesh, rules):
+    return tree_shardings(params_shape, mesh, rules, kind="param")
+
+
+def cache_shardings(cache_shape, mesh, rules):
+    return tree_shardings(cache_shape, mesh, rules, kind="cache")
+
+
+def opt_shardings(opt_shape, mesh, rules):
+    """Optimizer state: moments mirror their parameter's sharding.
+
+    The state tree embeds parameter-shaped subtrees under keys like
+    ``m``/``v``/``v_row``; key-path classification still matches because
+    the *parameter* key (e.g. ``w_up``) is the innermost component.
+    Factored Adafactor rows/cols (rank reduced by one) fall back to the
+    default (replicated trailing dim) which is always small.
+    """
+    return tree_shardings(opt_shape, mesh, rules, kind="param")
+
+
+def batch_shardings(batch_shape, mesh, rules: shd.ShardingRules):
+    """Token/frame/patch inputs: leading batch dim over (pod?, data)."""
+
+    def one(path, x):
+        logical = ("batch",) + (None,) * (len(x.shape) - 1)
+        spec = shd.logical_spec(tuple(x.shape), logical, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,136 @@
+"""Mamba-2 block (SSD) — prefill/train via chunked SSD, decode via state
+recurrence.  Follows the Mamba-2 parameterization: fused input
+projection -> [z | xBC | dt], causal depthwise conv over xBC, scalar-A
+per head, gated RMSNorm, output projection.  G=1 (B/C shared across
+heads), headdim P, state N = cfg.ssm_state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Ctx, dense_init, rmsnorm, rmsnorm_init
+from repro.kernels.ssd_chunk import ref as ssd_ref
+from repro.kernels.ssd_chunk.ops import ssd_forward
+
+
+def ssm_dims(d_model: int, expand: int, headdim: int, n_state: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_dim = d_inner + 2 * n_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_init(key, d_model, expand, headdim, n_state, conv_k, dtype):
+    d_inner, H, conv_dim = ssm_dims(d_model, expand, headdim, n_state)
+    ks = jax.random.split(key, 5)
+    in_dim = 2 * d_inner + 2 * n_state + H          # z | xBC | dt
+    return {
+        "w_in": dense_init(ks[0], (d_model, in_dim), dtype, d_model),
+        "conv_w": dense_init(ks[1], (conv_k, conv_dim), dtype, conv_k),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "w_out": dense_init(ks[2], (d_inner, d_model), dtype, d_inner),
+    }
+
+
+def _split(p, zxbcdt, d_inner, n_state, H):
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner * 2 + 2 * n_state]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_dwconv(xBC, w, conv_state=None):
+    """xBC (B,T,C), w (K,C). Returns (y (B,T,C), new_state (B,K-1,C))."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[-1]), xBC.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    y = sum(xp[:, i:i + xBC.shape[1]] * w[i][None, None, :]
+            for i in range(K))
+    return jax.nn.silu(y), xp[:, -(K - 1):]
+
+
+def ssm_fwd(p, x, ctx: Ctx, cfg, *, use_pallas=False, chunk: int = 128):
+    """Train/prefill. x (B,T,d) -> (y (B,T,d), state dict for decode)."""
+    B, T, d = x.shape
+    d_inner, H, conv_dim = ssm_dims(d, cfg.ssm_expand, cfg.ssm_headdim,
+                                    cfg.ssm_state)
+    N, P = cfg.ssm_state, cfg.ssm_headdim
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["w_in"])
+    z, xBC, dt = _split(p, zxbcdt, d_inner, N, H)
+    xBC, conv_state = _causal_dwconv(xBC, p["conv_w"])
+    xs = xBC[..., :d_inner].reshape(B, T, H, P)
+    Bm = xBC[..., d_inner:d_inner + N]
+    Cm = xBC[..., d_inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xs = ctx.shard(xs, ("batch", None, "model", None))
+    if use_pallas:
+        y, S = ssd_forward(xs.astype(jnp.float32), dt, A,
+                           Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                           chunk=chunk)
+    else:
+        y, S = ssd_ref.ssd_chunked_ref(
+            xs.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32),
+            chunk=chunk if T % chunk == 0 else _pick_chunk(T, chunk))
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    state = {"ssm": S.astype(jnp.float32), "conv": conv_state,
+             }
+    return ctx.shard(out, ("batch", None, None)), state
+
+
+def _pick_chunk(T: int, chunk: int) -> int:
+    for c in (chunk, 64, 32, 16, 8, 4, 2, 1):
+        if T % c == 0:
+            return c
+    return 1
+
+
+def ssm_init_state(B, d_model, cfg, dtype=jnp.float32):
+    d_inner, H, conv_dim = ssm_dims(d_model, cfg.ssm_expand, cfg.ssm_headdim,
+                                    cfg.ssm_state)
+    return {
+        "ssm": jnp.zeros((B, H, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(p, x, state, ctx: Ctx, cfg):
+    """One-token decode. x (B,1,d), state from ssm_init_state/ssm_fwd."""
+    B, _, d = x.shape
+    d_inner, H, conv_dim = ssm_dims(d, cfg.ssm_expand, cfg.ssm_headdim,
+                                    cfg.ssm_state)
+    N, P = cfg.ssm_state, cfg.ssm_headdim
+    x = ctx.shard(x, (None, None, "dec_embed"))
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["w_in"])
+    z, xBC, dt = _split(p, zxbcdt, d_inner, N, H)
+    # conv ring update
+    xp = jnp.concatenate([state["conv"], xBC], axis=1)       # (B,K,c)
+    y = jnp.einsum("bkc,kc->bc", xp, p["conv_w"])[:, None, :]
+    xBC = jax.nn.silu(y)
+    new_conv = xp[:, 1:]
+    xs = xBC[..., :d_inner].reshape(B, H, P)
+    Bm = xBC[:, 0, d_inner:d_inner + N]
+    Cm = xBC[:, 0, d_inner + N:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    S, y_t = ssd_ref.ssd_decode_step(state["ssm"], xs.astype(jnp.float32),
+                                     dt, A, Bm.astype(jnp.float32),
+                                     Cm.astype(jnp.float32))
+    y_t = y_t + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y_t = y_t.reshape(B, 1, d_inner).astype(x.dtype)
+    y_t = y_t * jax.nn.silu(z)
+    y_t = rmsnorm(p["norm"], y_t)
+    out = jnp.einsum("bte,ed->btd", y_t, p["w_out"])
+    return out, {"ssm": S, "conv": new_conv}

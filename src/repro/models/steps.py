@@ -1,0 +1,144 @@
+"""train_step / serve_step factories — the units the dry-run lowers.
+
+``make_train_step``: next-token CE (f32 log-softmax over the padded
+vocab, sharded on the vocab axis so the (B,S,V) logits never
+materialize replicated), MoE aux loss, optional z-loss, gradient
+accumulation over microbatches (405B-class configs), AdamW/Adafactor
+update with global-norm clipping and the config's LR schedule.
+
+``make_prefill_step`` / ``make_decode_step``: the two serving lowerings
+(batch prefill, single-token decode vs a KV cache of the cell's
+``seq_len``).
+
+All returned functions are pure (params/opt explicit) and
+``jax.jit``-able with in/out shardings from ``models.partition``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Ctx
+from repro.models.model import LM
+from repro.optim import make_optimizer, make_schedule
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def _ce(logits, labels, mask):
+    """Cross entropy in f32. logits (B,T,Vp), labels/mask (B,T)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0), lse
+
+
+def make_loss_fn(model: LM):
+    cfg = model.cfg
+
+    def loss_fn(params, batch, ctx: Ctx):
+        logits, aux = model.forward(params, batch, ctx)
+        tokens = batch["tokens"]
+        if cfg.family == "vlm":
+            # text occupies positions [P, P+S_txt); logits at P+i predict
+            # token i+1 -> slice the text region ending one short.
+            P = cfg.n_patches
+            logits = logits[:, P:P + tokens.shape[1] - 1]
+        else:
+            logits = logits[:, :-1]
+        labels = tokens[:, 1:]
+        mask = jnp.ones(labels.shape, jnp.float32)
+        loss, lse = _ce(logits, labels, mask)
+        metrics = {"ce": loss}
+        if cfg.is_moe:
+            loss = loss + cfg.aux_loss_w * aux
+            metrics["aux"] = aux
+        if cfg.zloss > 0:
+            zl = jnp.mean(lse ** 2)
+            loss = loss + cfg.zloss * zl
+            metrics["zloss"] = zl
+        return loss, metrics
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+def make_train_step(model: LM, *, mesh=None, rules=None,
+                    total_steps: int = 10_000, peak_lr: float = 3e-4):
+    cfg = model.cfg
+    ctx = Ctx(mesh=mesh, rules=rules)
+    loss_fn = make_loss_fn(model)
+    opt = make_optimizer(cfg.optimizer, moment_dtype=cfg.moment_dtype)
+    schedule = make_schedule(cfg.lr_schedule, peak=peak_lr,
+                             warmup=max(1, total_steps // 100),
+                             total=total_steps)
+    accum = max(1, cfg.grad_accum)
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb, ctx)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch, step):
+        if accum == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            # microbatch scan: grads accumulate in f32, activations for
+            # one microbatch at a time (the 405B memory plan, DESIGN §5)
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                loss, metrics, grads = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / accum,
+                    acc, grads)
+                return (acc, lsum + loss / accum), metrics
+
+            (grads, loss), mstack = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            metrics = jax.tree.map(jnp.mean, mstack)
+        lr = schedule(step)
+        new_params, new_opt, gnorm = opt.update(grads, opt_state, params,
+                                                step, lr)
+        metrics = {**metrics, "loss": loss, "gnorm": gnorm, "lr": lr}
+        return new_params, new_opt, metrics
+
+    return train_step, opt
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(model: LM, *, mesh=None, rules=None):
+    ctx = Ctx(mesh=mesh, rules=rules)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, ctx)
+
+    return prefill_step
+
+
+def make_decode_step(model: LM, *, mesh=None, rules=None):
+    ctx = Ctx(mesh=mesh, rules=rules)
+
+    def decode_step(params, cache, batch):
+        logits, cache = model.decode_step(params, cache, batch, ctx)
+        # greedy token out (serving returns ids, not logits, to the host)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return decode_step

@@ -1,0 +1,222 @@
+"""Decoder stacks: dense / MoE / SSM (Mamba-2) / hybrid (Jamba).
+
+Scan-over-layers everywhere: parameters are stacked with a leading
+layer dim and the layer body runs under ``jax.lax.scan`` (+ optional
+``jax.checkpoint``), keeping HLO size and 512-device CPU compile times
+bounded.  Jamba scans over 8-layer *super-blocks* (7 Mamba + 1 attn
+mixers; MoE on odd sublayers), the literature 1:7 interleave.
+
+Caches for serving are pytrees with the same leading layer dim, passed
+through the scan as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import Ctx
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+def _mixer_init(key, cfg: ArchConfig, kind: str, dtype):
+    if kind == "attn":
+        return L.attention_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim, dtype)
+    return SSM.ssm_init(key, cfg.d_model, cfg.ssm_expand, cfg.ssm_headdim,
+                        cfg.ssm_state, cfg.ssm_conv, dtype)
+
+
+def _ffn_init(key, cfg: ArchConfig, kind: str, dtype):
+    if kind == "moe":
+        return MOE.moe_init(key, cfg.d_model, cfg.d_ff, cfg.n_experts, dtype)
+    if kind == "mlp":
+        return L.mlp_init(key, cfg.d_model, cfg.d_ff, dtype)
+    return {}   # ssm family: no separate FFN
+
+
+def layer_init(key, cfg: ArchConfig, mixer: str, ffn: str, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"mixer": _mixer_init(k1, cfg, mixer, dtype),
+         "norm1": L.rmsnorm_init(cfg.d_model, dtype)}
+    if ffn:
+        p["ffn"] = _ffn_init(k2, cfg, ffn, dtype)
+        p["norm2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    return p
+
+
+def stacked_init(key, cfg: ArchConfig, n: int, mixer: str, ffn: str, dtype):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: layer_init(k, cfg, mixer, ffn, dtype))(keys)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+def _layer_fwd(p, x, ctx: Ctx, cfg: ArchConfig, mixer: str, ffn: str,
+               positions=None):
+    """Full-sequence layer. Returns (x, cache, aux)."""
+    h = L.rmsnorm(p["norm1"], x)
+    if mixer == "attn":
+        a, kv = L.attention_fwd(p["mixer"], h, ctx, causal=True,
+                                window=cfg.window, rope_theta=cfg.rope_theta,
+                                positions=positions,
+                                block_q=cfg.attn_block_q)
+        cache = {"k": kv[0], "v": kv[1]}
+    else:
+        a, state = SSM.ssm_fwd(p["mixer"], h, ctx, cfg, chunk=cfg.ssd_chunk)
+        cache = state
+    x = x + a
+    aux = jnp.zeros((), jnp.float32)
+    if ffn:
+        h = L.rmsnorm(p["norm2"], x)
+        if ffn == "moe":
+            f, aux = MOE.moe_fwd(p["ffn"], h, ctx, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor)
+        else:
+            f = L.mlp_fwd(p["ffn"], h, ctx)
+        x = x + f
+    return x, cache, aux
+
+
+def _layer_decode(p, x, cache, pos, ctx: Ctx, cfg: ArchConfig, mixer: str,
+                  ffn: str):
+    h = L.rmsnorm(p["norm1"], x)
+    if mixer == "attn":
+        a, cache = L.attention_decode(p["mixer"], h, cache, pos, ctx,
+                                      window=cfg.window,
+                                      rope_theta=cfg.rope_theta,
+                                      cache_update=cfg.cache_update)
+    else:
+        a, cache = SSM.ssm_decode(p["mixer"], h, cache, ctx, cfg)
+    x = x + a
+    if ffn:
+        h = L.rmsnorm(p["norm2"], x)
+        if ffn == "moe":
+            f, _ = MOE.moe_fwd(p["ffn"], h, ctx, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+        else:
+            f = L.mlp_fwd(p["ffn"], h, ctx)
+        x = x + f
+    return x, cache
+
+
+def _kinds(cfg: ArchConfig) -> tuple[str, str]:
+    if cfg.family == "ssm":
+        return "ssm", ""
+    ffn = "moe" if cfg.is_moe else "mlp"
+    return "attn", ffn
+
+
+# ---------------------------------------------------------------------------
+# homogeneous stacks (dense / moe / ssm / vlm)
+# ---------------------------------------------------------------------------
+def stack_init(key, cfg: ArchConfig, dtype):
+    mixer, ffn = _kinds(cfg)
+    return stacked_init(key, cfg, cfg.n_layers, mixer, ffn, dtype)
+
+
+def stack_fwd(params, x, ctx: Ctx, cfg: ArchConfig, positions=None,
+              collect_cache: bool = False):
+    """x (B,S,d) -> (x, stacked cache or None, aux mean)."""
+    mixer, ffn = _kinds(cfg)
+
+    def body(carry, lp):
+        h, aux = carry
+        h2, cache, a = _layer_fwd(lp, h, ctx, cfg, mixer, ffn, positions)
+        return (h2, aux + a), (cache if collect_cache else 0)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                    params, unroll=cfg.scan_unroll)
+    return x, (caches if collect_cache else None), aux / cfg.n_layers
+
+
+def stack_decode(params, caches, x, pos, ctx: Ctx, cfg: ArchConfig):
+    mixer, ffn = _kinds(cfg)
+
+    def body(h, inp):
+        lp, cache = inp
+        h2, cache2 = _layer_decode(lp, h, cache, pos, ctx, cfg, mixer, ffn)
+        return h2, cache2
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches),
+                                 unroll=cfg.scan_unroll)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# hybrid (Jamba) super-blocks
+# ---------------------------------------------------------------------------
+def _sb_layout(cfg: ArchConfig):
+    """Sublayer layout of one super-block: (mixer kind, ffn kind) x P."""
+    P = cfg.attn_every
+    out = []
+    for i in range(P):
+        mixer = "attn" if i == cfg.attn_index else "ssm"
+        ffn = "moe" if (cfg.is_moe and i % cfg.moe_every == 1) else "mlp"
+        out.append((mixer, ffn))
+    return out
+
+
+def hybrid_init(key, cfg: ArchConfig, dtype):
+    P = cfg.attn_every
+    assert cfg.n_layers % P == 0
+    nsb = cfg.n_layers // P
+    layout = _sb_layout(cfg)
+    keys = jax.random.split(key, nsb)
+
+    def one_sb(k):
+        ks = jax.random.split(k, P)
+        return {f"l{i}": layer_init(ks[i], cfg, layout[i][0], layout[i][1],
+                                    dtype)
+                for i in range(P)}
+
+    return jax.vmap(one_sb)(keys)
+
+
+def hybrid_fwd(params, x, ctx: Ctx, cfg: ArchConfig, positions=None,
+               collect_cache: bool = False):
+    layout = _sb_layout(cfg)
+
+    def body(carry, sbp):
+        h, aux = carry
+        caches = {}
+        for i, (mixer, ffn) in enumerate(layout):
+            h, cache, a = _layer_fwd(sbp[f"l{i}"], h, ctx, cfg, mixer, ffn,
+                                     positions)
+            aux = aux + a
+            if collect_cache:
+                caches[f"l{i}"] = cache
+        return (h, aux), (caches if collect_cache else 0)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                    params, unroll=cfg.scan_unroll)
+    return x, (caches if collect_cache else None), aux / cfg.n_layers
+
+
+def hybrid_decode(params, caches, x, pos, ctx: Ctx, cfg: ArchConfig):
+    layout = _sb_layout(cfg)
+
+    def body(h, inp):
+        sbp, sbc = inp
+        out_c = {}
+        for i, (mixer, ffn) in enumerate(layout):
+            h, out_c[f"l{i}"] = _layer_decode(sbp[f"l{i}"], h, sbc[f"l{i}"],
+                                              pos, ctx, cfg, mixer, ffn)
+        return h, out_c
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches),
+                                 unroll=cfg.scan_unroll)
+    return x, new_caches

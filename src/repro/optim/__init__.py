@@ -1,0 +1,15 @@
+"""Optimizers + LR schedules for the LM training substrate.
+
+AdamW (dtype-configurable moments) and Adafactor (factored second
+moment — the 405B config's optimizer: full Adam state does not fit a
+single v5e pod, see DESIGN.md §5), plus cosine and WSD (MiniCPM)
+schedules.  Pure-pytree implementations (no optax dependency offline).
+"""
+from repro.optim.optimizers import (
+    Optimizer, adamw, adafactor, make_optimizer, global_norm, clip_by_norm,
+)
+from repro.optim.schedules import cosine_lr, wsd_lr, make_schedule
+
+__all__ = ["Optimizer", "adamw", "adafactor", "make_optimizer",
+           "global_norm", "clip_by_norm", "cosine_lr", "wsd_lr",
+           "make_schedule"]

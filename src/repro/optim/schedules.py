@@ -1,0 +1,37 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_lr(step, *, peak: float, warmup: int, total: int,
+              floor_frac: float = 0.1):
+    """Linear warmup -> cosine decay to ``floor_frac * peak``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * (step + 1.0) / jnp.maximum(warmup, 1)   # nonzero at step 0
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    floor = floor_frac * peak
+    cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_lr(step, *, peak: float, warmup: int, total: int,
+           decay_frac: float = 0.1, floor_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM): flat plateau, late sharp decay."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = peak * (step + 1.0) / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - decay_start)
+                    / jnp.maximum(total - decay_start, 1), 0, 1)
+    floor = floor_frac * peak
+    dec = peak * (floor / peak) ** frac          # exponential decay leg
+    out = jnp.where(step < warmup, warm, jnp.where(step < decay_start,
+                                                   peak, dec))
+    return out
+
+
+def make_schedule(name: str, *, peak: float = 3e-4, warmup: int = 100,
+                  total: int = 10_000):
+    if name == "wsd":
+        return lambda s: wsd_lr(s, peak=peak, warmup=warmup, total=total)
+    return lambda s: cosine_lr(s, peak=peak, warmup=warmup, total=total)

@@ -1,0 +1,16 @@
+"""Large-scale runtime substrate: failure handling, elastic resharding,
+straggler mitigation, gradient compression."""
+from repro.runtime.fault import (SimulatedFailure, FailureInjector,
+                                 run_with_restarts)
+from repro.runtime.elastic import reshard_restore, device_put_like
+from repro.runtime.straggler import TimeBudget
+from repro.runtime.compression import (quantize_int8, dequantize_int8,
+                                       CompressionState, compress_grads,
+                                       decompress_grads, topk_sparsify)
+
+__all__ = [
+    "SimulatedFailure", "FailureInjector", "run_with_restarts",
+    "reshard_restore", "device_put_like", "TimeBudget",
+    "quantize_int8", "dequantize_int8", "CompressionState",
+    "compress_grads", "decompress_grads", "topk_sparsify",
+]

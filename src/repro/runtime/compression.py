@@ -1,0 +1,93 @@
+"""Gradient compression for slow-interconnect data parallelism.
+
+Two standard schemes, both with error feedback (the residual of the
+lossy round-trip is carried into the next step, preserving convergence
+— Karimireddy et al. 2019):
+
+- **int8 quantization**: per-leaf symmetric max-abs scaling, 4x fewer
+  bytes on the DP all-reduce;
+- **top-k sparsification**: keep the k largest-|g| entries per leaf.
+
+In-jit usage: ``compress -> psum(int8-as-int32 accumulators) ->
+decompress``; the repo's train loops call ``compress_grads`` /
+``decompress_grads`` around their all-reduce boundary when
+``--compress`` is set (see launch/train.py).  Tests verify the error-
+feedback invariant and convergence on a quadratic.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x, k_frac: float):
+    """Zero all but the ceil(k_frac * n) largest-|x| entries."""
+    flat = x.reshape(-1)
+    k = max(1, int(k_frac * flat.shape[0]))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+class CompressionState:
+    """Per-leaf error-feedback residuals."""
+
+    @staticmethod
+    def init(params) -> Tree:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+
+
+def compress_grads(grads: Tree, residual: Tree, *, scheme: str = "int8",
+                   k_frac: float = 0.01):
+    """-> (payload tree, new_residual).  payload is what crosses the DP
+    fabric (int8 + scale, or sparse values)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        if scheme == "int8":
+            q, s = quantize_int8(gf)
+            deq = dequantize_int8(q, s)
+            return {"q": q, "s": s}, gf - deq
+        sp = topk_sparsify(gf, k_frac)
+        return {"v": sp}, gf - sp
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_r = treedef.flatten_up_to(residual)
+    pairs = [one(g, r) for g, r in zip(leaves_g, leaves_r)]
+    payload = treedef.unflatten([p[0] for p in pairs])
+    new_res = treedef.unflatten([p[1] for p in pairs])
+    return payload, new_res
+
+
+def decompress_grads(payload: Tree, *, scheme: str = "int8"):
+    def one(p):
+        if scheme == "int8":
+            return dequantize_int8(p["q"], p["s"])
+        return p["v"]
+
+    is_payload = lambda x: isinstance(x, dict) and ("q" in x or "v" in x)
+    return jax.tree.map(one, payload, is_leaf=is_payload)
+
+
+def compression_ratio(grads: Tree, *, scheme: str = "int8",
+                      k_frac: float = 0.01) -> float:
+    raw = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    if scheme == "int8":
+        comp = sum(g.size * 1 + 4 for g in jax.tree.leaves(grads))
+    else:
+        comp = sum(int(max(1, k_frac * g.size)) * 8
+                   for g in jax.tree.leaves(grads))
+    return raw / comp

@@ -1,0 +1,35 @@
+"""Elastic scaling: restore a checkpoint onto a *different* mesh.
+
+Checkpoints are mesh-agnostic host NumPy (see ``repro.ckpt``); this
+module re-places them: every leaf is ``jax.device_put`` with the
+NamedSharding derived from the partition rules **for the new mesh** —
+a run checkpointed on 256 chips restores onto 512 (or onto this
+container's single CPU device) with no format conversion.  Divisibility
+fallbacks in ``sharding.logical_spec`` make any mesh size legal.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.ckpt import restore_checkpoint
+from repro.models import partition as PT
+from repro.models import sharding as shd
+
+
+def device_put_like(tree, mesh, rules, *, kind: str = "param"):
+    """Place a host pytree onto ``mesh`` per the partition rules."""
+    shardings = PT.tree_shardings(tree, mesh, rules, kind=kind)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def reshard_restore(directory: str, like, mesh, *, multi_pod: bool = False,
+                    rules: shd.ShardingRules | None = None,
+                    step: int | None = None, kind: str = "param"):
+    """Restore the latest checkpoint and shard it for ``mesh``.
+
+    ``like`` provides structure/shapes only (ShapeDtypeStructs fine).
+    Returns (sharded_tree, step, meta).
+    """
+    rules = rules or shd.make_rules(multi_pod)
+    host_tree, step, meta = restore_checkpoint(directory, like, step)
+    return device_put_like(host_tree, mesh, rules, kind=kind), step, meta

@@ -1,0 +1,48 @@
+"""Straggler mitigation helpers.
+
+Two mechanisms used by the drivers:
+
+1. ``TimeBudget`` — bounded collection: rollout/data producers are
+   given a wall-clock budget; work not delivered in time is *dropped*
+   (off-policy DDPG tolerates missing episodes; the data loader
+   re-issues the step's batch deterministically).  This is the
+   classical backup-task/straggler-drop trick adapted to a
+   single-coordinator JAX loop.
+2. Deadline-aware scheduling of the MAS itself is the paper's own
+   mechanism (RELMAS reacts to SA busy-times through the primer
+   encoding) — slow sub-accelerators simply advertise longer busy
+   times and the policy routes around them; see
+   ``benchmarks/straggler_bench.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, TypeVar
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass
+class TimeBudget:
+    seconds: float
+
+    def __post_init__(self):
+        self._t0 = time.monotonic()
+
+    def reset(self):
+        self._t0 = time.monotonic()
+
+    @property
+    def exhausted(self) -> bool:
+        return time.monotonic() - self._t0 > self.seconds
+
+    def collect(self, producers: Iterable[Callable[[], T]],
+                min_items: int = 1) -> list[T]:
+        """Run producers until the budget is gone (always >= min_items)."""
+        out: list[T] = []
+        for i, p in enumerate(producers):
+            if len(out) >= min_items and self.exhausted:
+                break
+            out.append(p())
+        return out

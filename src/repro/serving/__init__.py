@@ -1,0 +1,14 @@
+"""Multi-tenant serving plane.
+
+Control plane: RELMAS (or a baseline) schedules per-layer sub-jobs of
+tenant requests onto the simulated heterogeneous MAS
+(``serving.service``).  Data plane: a real (small) JAX model serves
+batched requests through prefill + continuously-batched decode
+(``serving.batcher``) — the end-to-end example wires both together.
+"""
+from repro.serving.request import Request, synth_requests
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.service import MultiTenantService, per_tenant_metrics
+
+__all__ = ["Request", "synth_requests", "ContinuousBatcher",
+           "MultiTenantService", "per_tenant_metrics"]

@@ -1,0 +1,82 @@
+"""Multi-tenant scheduling service: policy x registry x environment.
+
+Thin deployment wrapper over ``sim.SchedulingEnv``: binds a scheduler
+(RELMAS checkpoint or named baseline), runs request episodes, and
+reports global + per-tenant SLA metrics — the serving-side analogue of
+``launch/rl_train.py``'s training loop.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from repro.ckpt import restore_checkpoint
+from repro.core import baselines as BL
+from repro.core import policy as P
+from repro.core.rollout import make_baseline_period, make_policy_period, \
+    run_episode
+from repro.costmodel.registry import Registry
+from repro.sim.arrivals import ArrivalConfig
+from repro.sim.env import EnvConfig, SchedulingEnv
+
+
+def per_tenant_metrics(env: SchedulingEnv, state, trace) -> dict[str, dict]:
+    """SLA breakdown by tenant (model id) for one finished episode."""
+    model = np.asarray(trace["model"])
+    arrived = np.asarray(trace["arrival"]) < 1e29
+    hit = np.asarray(state["hit"])
+    counted = np.asarray(state["done"] | state["missed"]) & arrived
+    out = {}
+    for mid, name in enumerate(env.registry.model_names):
+        sel = counted & (model == mid)
+        n = int(sel.sum())
+        out[name] = {"jobs": n,
+                     "sla_rate": float(hit[sel].sum() / n) if n else None}
+    return out
+
+
+class MultiTenantService:
+    def __init__(self, registry: Registry, *, policy: str = "relmas",
+                 ckpt_dir: str | None = None, hidden: int = 64,
+                 env_cfg: EnvConfig | None = None,
+                 arrivals: ArrivalConfig | None = None):
+        self.env = SchedulingEnv(registry, env_cfg or EnvConfig(),
+                                 arrivals)
+        self.policy_name = policy
+        if policy == "relmas":
+            pcfg = P.PolicyConfig(feat_dim=self.env.feat_dim,
+                                  act_dim=self.env.act_dim, hidden=hidden)
+            params = P.init_actor(jax.random.PRNGKey(0), pcfg)
+            if ckpt_dir and os.path.isdir(ckpt_dir):
+                try:
+                    params, _, _ = restore_checkpoint(ckpt_dir, params)
+                except (ValueError, KeyError, FileNotFoundError) as e:
+                    # checkpoint trained for a different MAS shape (M
+                    # changes feat/act dims) — serve with a fresh policy
+                    print(f"[service] checkpoint incompatible ({e}); "
+                          f"using untrained policy")
+            self.params = params
+            self._period = make_policy_period(self.env, pcfg)
+        else:
+            fn = BL.BASELINES[policy]
+            self.params = None
+            self._period = make_baseline_period(self.env, fn)
+
+    def run_episode(self, seed: int = 0) -> dict:
+        rng = np.random.default_rng(seed)
+        trace, state = self.env.new_episode(rng)
+        key = jax.random.PRNGKey(seed)
+        for _ in range(self.env.cfg.periods):
+            if self.params is not None:
+                key, sub = jax.random.split(key)
+                state, _, _ = self._period(self.params, state, trace, sub,
+                                           sigma=0.0)
+            else:
+                state, _, _ = self._period(state, trace)
+        state = self.env.mark_drops(state, trace, state["t"])
+        metrics = {k: float(v) for k, v in
+                   self.env.metrics(state, trace).items()}
+        metrics["per_tenant"] = per_tenant_metrics(self.env, state, trace)
+        return metrics

@@ -1,0 +1,15 @@
+"""Multi-accelerator multi-tenant simulation platform (paper Sec. 5).
+
+Event-driven executor with shared-memory-bandwidth contention
+(proportional slowdown / equal stall cycles, Sec. 3), Pareto arrival
+generation, and the periodic-scheduling RL environment used both to
+train RELMAS and to evaluate every baseline.
+"""
+from repro.sim.engine import simulate_np, simulate_jax, commit_period_np
+from repro.sim.arrivals import ArrivalConfig, generate_trace
+from repro.sim.env import EnvConfig, SchedulingEnv
+
+__all__ = [
+    "simulate_np", "simulate_jax", "commit_period_np",
+    "ArrivalConfig", "generate_trace", "EnvConfig", "SchedulingEnv",
+]

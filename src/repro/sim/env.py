@@ -1,0 +1,258 @@
+"""Periodic-scheduling environment (paper Sec. 4.1, Fig. 2a).
+
+Fixed-shape, jit-friendly formulation: instead of a slot-based mutable
+ready queue, per-job state (next layer to schedule, ready time, flags)
+is kept and the RQ is *derived* each period by packing the uncommitted
+layers of active jobs — sorted by absolute deadline, exactly the order
+the paper feeds the LSTM — into ``max_rq`` slots.  Because a job's
+layers occupy contiguous ascending slots, precedence reduces to
+``dep[i] = i-1`` within a job, which is what the contention engine
+consumes.
+
+Each period:
+  1. deadline-passed jobs are dropped (whole remaining job = SLA miss);
+  2. the RQ is built from jobs arrived by ``t`` + residuals;
+  3. the policy (or a baseline) emits (priority, SA) per slot;
+  4. the engine simulates the full horizon; SJs *started* before
+     ``t + T_s`` commit (non-preemptive), the rest become residuals;
+  5. the paper reward is computed from the projected finish times;
+  6. the transition's next state encodes the residual RQ only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.costmodel.registry import Registry
+from repro.sim.arrivals import ArrivalConfig, generate_trace
+from repro.sim.engine import simulate_jax, INF
+
+State = dict[str, Any]
+Trace = dict[str, Any]
+Slots = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    t_s_us: float = 500.0        # scheduling period T_S
+    periods: int = 60            # episode length (last ~40% drains arrivals)
+    max_rq: int = 96             # R: RQ slot capacity presented to the policy
+    max_jobs: int = 64           # J
+    bandwidth_gbps: float = 16.0 # shared DRAM bandwidth (fig.4 sweeps this)
+    # reward coefficients (paper Sec. 5)
+    alpha: float = 0.10
+    beta: float = 0.11
+    gamma_r: float = 0.05
+    delta: float = 0.01
+    # feature normalization
+    ttd_norm_periods: float = 8.0
+
+    @property
+    def horizon_us(self) -> float:
+        return 0.6 * self.t_s_us * self.periods
+
+
+class SchedulingEnv:
+    """Binds a model Registry (tables) + EnvConfig into pure step functions."""
+
+    def __init__(self, registry: Registry, cfg: EnvConfig,
+                 arrivals: ArrivalConfig | None = None):
+        self.cfg = cfg
+        self.registry = registry
+        d = registry.dense()
+        self.num_models = d["num_models"]
+        self.lmax = d["lmax"]
+        self.num_sas = d["num_sas"]
+        self.lat = jnp.asarray(d["lat"], jnp.float32)      # (n, Lmax, M)
+        self.bw = jnp.asarray(d["bw"], jnp.float32)
+        self.en = jnp.asarray(d["en"], jnp.float32)
+        self.n_layers = jnp.asarray(d["n_layers"], jnp.int32)
+        self.min_lat = jnp.asarray(d["min_lat"], jnp.float32)
+        self.arrivals = arrivals or ArrivalConfig(
+            max_jobs=cfg.max_jobs, horizon_us=cfg.horizon_us,
+            slack_us=2.0 * cfg.t_s_us)
+        self.feat_dim = 4 + 2 * self.num_sas
+        self.act_dim = 1 + self.num_sas
+        self.seq_len = cfg.max_rq + 1          # + primer
+
+    # ---------------- episode setup ----------------
+    def new_episode(self, rng: np.random.Generator) -> tuple[Trace, State]:
+        tr = generate_trace(np.asarray(self.min_lat), self.arrivals, rng)
+        trace = {k: jnp.asarray(v) for k, v in tr.items()}
+        trace["njl"] = self.n_layers[trace["model"]]
+        J, M = self.cfg.max_jobs, self.num_sas
+        state: State = dict(
+            nls=jnp.zeros((J,), jnp.int32),
+            jready=trace["arrival"],
+            missed=jnp.zeros((J,), bool),
+            done=jnp.zeros((J,), bool),
+            hit=jnp.zeros((J,), bool),
+            fjob=jnp.full((J,), INF, jnp.float32),
+            sa_free=jnp.zeros((M,), jnp.float32),
+            t=jnp.zeros((), jnp.float32),
+            energy=jnp.zeros((), jnp.float32),
+        )
+        return trace, state
+
+    # ---------------- pure helpers (traceable) ----------------
+    def mark_drops(self, state: State, trace: Trace, now) -> State:
+        overdue = ((trace["arrival"] <= now) & ~state["done"]
+                   & ~state["missed"] & (trace["deadline"] < now))
+        return {**state, "missed": state["missed"] | overdue}
+
+    def build_slots(self, state: State, trace: Trace, cutoff) -> Slots:
+        """Pack uncommitted layers of active jobs into R slots by deadline."""
+        cfg, R, J = self.cfg, self.cfg.max_rq, self.cfg.max_jobs
+        active = ((trace["arrival"] <= cutoff) & ~state["done"]
+                  & ~state["missed"])
+        rem = jnp.where(active, trace["njl"] - state["nls"], 0)
+        key = jnp.where(active & (rem > 0), trace["deadline"], INF)
+        order = jnp.argsort(key)                       # (J,)
+        rem_o = rem[order]
+        cum = jnp.cumsum(rem_o)
+        starts = cum - rem_o
+        total = cum[-1]
+        i = jnp.arange(R)
+        k = jnp.searchsorted(cum, i, side="right")
+        k = jnp.clip(k, 0, J - 1)
+        valid = i < jnp.minimum(total, R)
+        job = jnp.where(valid, order[k], 0)
+        layer = jnp.where(valid, state["nls"][job] + (i - starts[k]), 0)
+        layer = jnp.clip(layer, 0, self.lmax - 1)
+        prev_same = jnp.concatenate(
+            [jnp.array([False]), (job[1:] == job[:-1]) & valid[1:] & valid[:-1]])
+        dep = jnp.where(prev_same, i - 1, -1)
+        model = trace["model"][job]
+        ready_rel = jnp.where(
+            dep < 0, jnp.maximum(0.0, state["jready"][job] - state["t"]), 0.0)
+        cost_all = self.lat[model, layer]              # (R, M)
+        bw_all = self.bw[model, layer]
+        en_all = self.en[model, layer]
+        zero = jnp.where(valid[:, None], 1.0, 0.0)
+        return dict(job=job, layer=layer, valid=valid, dep=dep,
+                    ready_rel=ready_rel * valid,
+                    cost_all=cost_all * zero, bw_all=bw_all * zero,
+                    en_all=en_all * zero, model=model,
+                    deadline=trace["deadline"][job], q=trace["q"][job],
+                    arrival=trace["arrival"][job])
+
+    def encode(self, slots: Slots, state: State):
+        """-> (feats (R+1, F), mask (R+1,)) with the primer at t=0."""
+        cfg = self.cfg
+        tsn = cfg.t_s_us * cfg.ttd_norm_periods
+        t = state["t"]
+        model_n = (slots["model"] + 1.0) / self.num_models
+        layer_n = (slots["layer"] + 1.0) / self.lmax
+        ttd = jnp.clip((slots["deadline"] - t) / tsn, -1.0, 1.0)
+        wait = jnp.clip((t - slots["arrival"]) / tsn, 0.0, 1.0)
+        c_n = jnp.clip(slots["cost_all"] / cfg.t_s_us, 0.0, 2.0) / 2.0
+        b_n = slots["bw_all"] / cfg.bandwidth_gbps
+        v = slots["valid"].astype(jnp.float32)
+        rows = jnp.concatenate(
+            [model_n[:, None] * v[:, None], layer_n[:, None] * v[:, None],
+             ttd[:, None] * v[:, None], wait[:, None] * v[:, None],
+             c_n * v[:, None], b_n * v[:, None]], axis=-1)
+        sa_busy = jnp.maximum(0.0, state["sa_free"] - t) / cfg.t_s_us
+        primer = jnp.concatenate(
+            [jnp.zeros((4,)), jnp.clip(sa_busy, 0.0, 4.0) / 4.0,
+             jnp.zeros((self.num_sas,))])[None, :]
+        feats = jnp.concatenate([primer, rows], axis=0)
+        mask = jnp.concatenate([jnp.array([True]), slots["valid"]])
+        return feats.astype(jnp.float32), mask
+
+    def simulate(self, state: State, slots: Slots, prio, sa_choice):
+        """Engine run for the current RQ. Returns (start, finish) rel. to t."""
+        sa = jnp.clip(sa_choice.astype(jnp.int32), 0, self.num_sas - 1)
+        take = lambda x: jnp.take_along_axis(x, sa[:, None], axis=1)[:, 0]
+        cost = take(slots["cost_all"])
+        bw = take(slots["bw_all"])
+        sa_free_rel = jnp.maximum(0.0, state["sa_free"] - state["t"])
+        start, fin = simulate_jax(
+            slots["valid"], sa, prio, cost, bw, slots["dep"],
+            slots["ready_rel"], sa_free_rel,
+            jnp.float32(self.cfg.bandwidth_gbps), num_sas=self.num_sas)
+        return start, fin, cost, bw, take(slots["en_all"]), sa
+
+    def reward(self, state: State, slots: Slots, fin):
+        cfg = self.cfg
+        t = state["t"]
+        ran = slots["valid"] & (fin < INF / 2)
+        abs_f = t + fin
+        delta = jnp.where(fin < cfg.t_s_us, 1.0, cfg.delta)
+        hit = abs_f <= slots["deadline"]
+        A = jnp.where(hit, cfg.alpha, -cfg.beta)
+        slack = jnp.clip((slots["deadline"] - abs_f)
+                         / jnp.maximum(slots["q"], 1e-3), -3.0, 3.0)
+        r_slot = delta * (A + cfg.gamma_r * slack)
+        r_unran = cfg.delta * (-cfg.beta - 3.0 * cfg.gamma_r)
+        return jnp.sum(jnp.where(slots["valid"],
+                                 jnp.where(ran, r_slot, r_unran), 0.0))
+
+    def commit(self, state: State, trace: Trace, slots: Slots,
+               start, fin, en, sa) -> State:
+        cfg, J, M = self.cfg, self.cfg.max_jobs, self.num_sas
+        t = state["t"]
+        # an SJ commits iff it *started* inside the period; the finite-fin
+        # guard protects state from a (bounded-iteration) engine anomaly
+        committed = (slots["valid"] & (start < cfg.t_s_us - 1e-6)
+                     & (fin < INF / 2))
+        job = slots["job"]
+        ncom = jax.ops.segment_sum(committed.astype(jnp.int32), job,
+                                   num_segments=J)
+        fin_c = jnp.where(committed, fin, -INF)
+        jlast = jax.ops.segment_max(fin_c, job, num_segments=J)
+        nls = state["nls"] + ncom
+        jready = jnp.where(ncom > 0, t + jlast, state["jready"])
+        arrived = trace["arrival"] <= t
+        newly_done = arrived & ~state["done"] & ~state["missed"] \
+            & (nls >= trace["njl"]) & (ncom > 0)
+        fjob = jnp.where(newly_done, jready, state["fjob"])
+        hit = state["hit"] | (newly_done & (fjob <= trace["deadline"]))
+        done = state["done"] | newly_done
+        energy = state["energy"] + jnp.sum(jnp.where(committed, en, 0.0))
+        fin_sa = jax.ops.segment_max(fin_c, sa, num_segments=M)
+        sa_free = jnp.where(fin_sa > -INF / 2,
+                            jnp.maximum(state["sa_free"], t + fin_sa),
+                            state["sa_free"])
+        return {**state, "nls": nls, "jready": jready, "done": done,
+                "hit": hit, "fjob": fjob, "energy": energy,
+                "sa_free": sa_free, "t": t + cfg.t_s_us}
+
+    # ---------------- one full period (traceable) ----------------
+    def period(self, state: State, trace: Trace, act_fn):
+        """act_fn(feats, mask, slots, state) -> (a (R,G), prio (R,), sa (R,)).
+
+        Returns (new_state, transition dict, info dict).
+        """
+        t = state["t"]
+        state = self.mark_drops(state, trace, t)
+        slots = self.build_slots(state, trace, cutoff=t)
+        feats, mask = self.encode(slots, state)
+        a, prio, sa_choice = act_fn(feats, mask, slots, state)
+        start, fin, cost, bw, en, sa = self.simulate(state, slots, prio,
+                                                     sa_choice)
+        r = self.reward(state, slots, fin)
+        new_state = self.commit(state, trace, slots, start, fin, en, sa)
+        # residual-RQ-only next state (paper Sec. 4.2): cutoff at *old* t
+        ns = self.mark_drops(new_state, trace, new_state["t"])
+        rslots = self.build_slots(ns, trace, cutoff=t)
+        feats2, mask2 = self.encode(rslots, ns)
+        trans = dict(s=feats, mask=mask, a=a, r=r, s2=feats2, mask2=mask2)
+        info = dict(reward=r,
+                    committed=jnp.sum(slots["valid"] & (start < self.cfg.t_s_us)))
+        return new_state, trans, info
+
+    # ---------------- episode metrics ----------------
+    def metrics(self, state: State, trace: Trace) -> dict[str, jnp.ndarray]:
+        counted = state["done"] | state["missed"]
+        hits = jnp.sum(state["hit"])
+        arrived = jnp.sum(trace["arrival"] < INF / 2)
+        return dict(
+            hits=hits, counted=jnp.sum(counted), arrived=arrived,
+            sla_rate=hits / jnp.maximum(jnp.sum(counted), 1),
+            energy_uj=state["energy"],
+        )

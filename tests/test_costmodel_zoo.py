@@ -1,0 +1,84 @@
+"""Cost-model + workload-zoo tests (Timeloop-lite semantics)."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.costmodel import (DEFAULT_MAS, EYERISS_LARGE, SIMBA_LARGE,
+                             SIMBA_SMALL, conv2d, fc, layer_cost)
+from repro.costmodel.accelerators import DATACENTER_MAS
+from repro.workloads import (LM_WORKLOADS, build_llm_registry,
+                             build_registry, llm_layer_specs)
+
+
+def test_roofline_combine_compute_vs_memory_bound():
+    # big square conv: compute-bound on Eyeriss (latency ~ macs/peak)
+    big = conv2d("c", 56, 56, 256, 256, 3)
+    lat, bw, en = layer_cost(EYERISS_LARGE, big)
+    assert bw < 16.0                      # leaves bandwidth headroom
+    # fc layer streams huge weights: memory-bound -> demands full DRAM bw
+    f = fc("f", 4096, 4096)
+    lat2, bw2, _ = layer_cost(SIMBA_SMALL, f)
+    assert bw2 == pytest.approx(16.0, rel=0.05)
+
+
+def test_dataflow_heterogeneity():
+    """WS (Simba) beats RS (Eyeriss) on FC *compute*; at 16 GB/s both
+    are DRAM-bound so end latency ties — compare the compute term."""
+    f = fc("f", 2048, 2048)
+    assert SIMBA_LARGE.compute_cycles(f) < EYERISS_LARGE.compute_cycles(f)
+    # and on a reuse-heavy conv, RS's higher conv utilization wins
+    c = conv2d("c", 56, 56, 256, 256, 3)
+    assert EYERISS_LARGE.compute_cycles(c) < SIMBA_LARGE.compute_cycles(c)
+
+
+def test_datacenter_bandwidth_regression():
+    """dram_gbps must reach layer_cost (fixed bug): same layer is faster
+    on the HBM-class MAS."""
+    f = fc("f", 4096, 4096, dtype_bytes=2)
+    lat_edge, _, _ = layer_cost(SIMBA_LARGE, f, dram_gbps=16.0)
+    lat_dc, _, _ = layer_cost(SIMBA_LARGE, f, dram_gbps=819.0)
+    assert lat_dc < lat_edge / 5
+
+
+def test_cnn_zoo_tables():
+    reg = build_registry("mixed")
+    d = reg.dense()
+    assert d["num_models"] == 7
+    lat = d["lat"]
+    for i, name in enumerate(reg.model_names):
+        L = d["n_layers"][i]
+        assert (lat[i, :L] > 0).all(), name
+        assert np.isfinite(lat[i, :L]).all(), name
+    # heavier models have longer isolated latency
+    ml = dict(zip(reg.model_names, d["min_lat"]))
+    assert ml["resnet50"] > ml["squeezenet"]
+    assert ml["keyword_spotting"] < ml["squeezenet"]
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_llm_layerization_all_archs(arch):
+    cfg = ARCHS[arch]
+    for phase in ("prefill", "decode"):
+        ls = llm_layer_specs(cfg, phase=phase, seq=64, ctx=512)
+        expected = cfg.n_layers + 2 + (cfg.enc_layers
+                                       if cfg.family == "encdec" else 0)
+        assert len(ls) == expected
+        assert all(l.macs > 0 for l in ls[1:])
+
+
+def test_llm_decode_more_bandwidth_bound_than_prefill():
+    reg_d = build_llm_registry("lm_light", phase="decode")
+    reg_p = build_llm_registry("lm_light", phase="prefill", seq=256)
+    bd = reg_d.dense()["bw"]
+    bp = reg_p.dense()["bw"]
+    cap = DATACENTER_MAS.dram_gbps
+    frac_d = (bd > 0.9 * cap).mean()
+    frac_p = (bp[bp > 0] > 0.9 * cap).mean()
+    assert frac_d > frac_p                 # decode saturates the bus more
+
+
+def test_moe_cheaper_than_dense_at_similar_size():
+    """OLMoE (1B active) decodes faster than deepseek-7b (dense)."""
+    reg = build_llm_registry("lm_heavy", phase="decode")
+    ml = dict(zip(reg.model_names, reg.dense()["min_lat"]))
+    assert ml["olmoe-1b-7b"] < ml["deepseek-7b"]

@@ -1,0 +1,150 @@
+"""Contention-engine tests: NumPy oracle vs JAX twin + invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sim.engine import simulate_np, simulate_jax, INF
+
+
+def run_both(valid, assign, prio, cost, bw, dep, ready, sa_free, B, M):
+    s_np, f_np = simulate_np(valid, assign, prio, cost, bw, dep, ready,
+                             sa_free, B)
+    import jax.numpy as jnp
+    s_j, f_j = simulate_jax(
+        jnp.asarray(valid), jnp.asarray(assign), jnp.asarray(prio),
+        jnp.asarray(cost, jnp.float32), jnp.asarray(bw, jnp.float32),
+        jnp.asarray(dep), jnp.asarray(ready, jnp.float32),
+        jnp.asarray(sa_free, jnp.float32), jnp.float32(B), num_sas=M)
+    return (s_np, f_np), (np.asarray(s_j), np.asarray(f_j))
+
+
+def test_single_job_no_contention():
+    # one SJ, SA free, plenty of bandwidth -> start 0, finish = cost
+    (s, f), (sj, fj) = run_both(
+        valid=[True], assign=[0], prio=[0.5], cost=[10.0], bw=[4.0],
+        dep=[-1], ready=[0.0], sa_free=[0.0], B=16.0, M=2)
+    assert s[0] == 0.0 and f[0] == pytest.approx(10.0)
+    assert fj[0] == pytest.approx(10.0, rel=1e-5)
+
+
+def test_bandwidth_contention_slowdown():
+    # two SJs on different SAs, each demanding 12 GB/s of a 16 GB/s bus:
+    # D=24 > 16 -> rho = 2/3 -> both take cost / (2/3) = 15
+    (s, f), (sj, fj) = run_both(
+        valid=[True, True], assign=[0, 1], prio=[0.5, 0.5],
+        cost=[10.0, 10.0], bw=[12.0, 12.0], dep=[-1, -1],
+        ready=[0.0, 0.0], sa_free=[0.0, 0.0], B=16.0, M=2)
+    assert f[0] == pytest.approx(15.0) and f[1] == pytest.approx(15.0)
+    np.testing.assert_allclose(fj, f, rtol=1e-4)
+
+
+def test_partial_overlap_contention():
+    # SJ0: cost 10 bw 12; SJ1 arrives ready at t=5, bw 12.
+    # [0,5): rho=1 (prog0=5); [5,?): rho=2/3.
+    # SJ0 remaining 5 at rate 2/3 -> finishes at 5 + 7.5 = 12.5
+    # SJ1: progress 7.5*2/3 = 5 by 12.5, then alone rate 1 -> 12.5+5 = 17.5
+    (s, f), (_, fj) = run_both(
+        valid=[True, True], assign=[0, 1], prio=[0.5, 0.5],
+        cost=[10.0, 10.0], bw=[12.0, 12.0], dep=[-1, -1],
+        ready=[0.0, 5.0], sa_free=[0.0, 0.0], B=16.0, M=2)
+    assert f[0] == pytest.approx(12.5) and f[1] == pytest.approx(17.5)
+    np.testing.assert_allclose(fj, f, rtol=1e-4)
+
+
+def test_priority_order_on_same_sa():
+    (s, f), _ = run_both(
+        valid=[True, True], assign=[0, 0], prio=[-0.5, 0.9],
+        cost=[5.0, 5.0], bw=[1.0, 1.0], dep=[-1, -1],
+        ready=[0.0, 0.0], sa_free=[0.0], B=16.0, M=1)
+    assert s[1] == 0.0 and s[0] == pytest.approx(5.0)  # slot1 runs first
+
+
+def test_dependency_chain():
+    # slot1 depends on slot0 (different SAs): must start at slot0's finish
+    (s, f), (_, fj) = run_both(
+        valid=[True, True], assign=[0, 1], prio=[0.5, 0.9],
+        cost=[5.0, 3.0], bw=[1.0, 1.0], dep=[-1, 0],
+        ready=[0.0, 0.0], sa_free=[0.0, 0.0], B=16.0, M=2)
+    assert s[1] == pytest.approx(5.0) and f[1] == pytest.approx(8.0)
+    np.testing.assert_allclose(fj, f, rtol=1e-4)
+
+
+def test_sa_initially_busy():
+    (s, f), _ = run_both(
+        valid=[True], assign=[0], prio=[0.0], cost=[2.0], bw=[1.0],
+        dep=[-1], ready=[0.0], sa_free=[7.0], B=16.0, M=1)
+    assert s[0] == pytest.approx(7.0) and f[0] == pytest.approx(9.0)
+
+
+def test_ready_skip_does_not_deadlock():
+    # higher-priority SJ not ready until t=10; lower-prio one runs first
+    (s, f), _ = run_both(
+        valid=[True, True], assign=[0, 0], prio=[0.9, 0.1],
+        cost=[4.0, 4.0], bw=[1.0, 1.0], dep=[-1, -1],
+        ready=[10.0, 0.0], sa_free=[0.0], B=16.0, M=1)
+    assert s[1] == 0.0 and s[0] == pytest.approx(10.0)
+
+
+@st.composite
+def scenario(draw):
+    n = draw(st.integers(2, 12))
+    M = draw(st.integers(1, 4))
+    n_jobs = draw(st.integers(1, 4))
+    job_of = [draw(st.integers(0, n_jobs - 1)) for _ in range(n)]
+    job_of.sort()  # contiguous layers per job, like the env packing
+    dep = [-1] * n
+    for i in range(1, n):
+        if job_of[i] == job_of[i - 1]:
+            dep[i] = i - 1
+    fl = st.floats(0.5, 20.0, allow_nan=False, width=32)
+    return dict(
+        valid=[True] * n,
+        assign=[draw(st.integers(0, M - 1)) for _ in range(n)],
+        prio=[draw(st.floats(-1, 1, allow_nan=False, width=32))
+              for _ in range(n)],
+        cost=[draw(fl) for _ in range(n)],
+        bw=[draw(st.floats(0.5, 16.0, allow_nan=False, width=32))
+            for _ in range(n)],
+        dep=dep,
+        ready=[0.0 if dep[i] >= 0 else draw(st.floats(0, 10, width=32))
+               for i in range(n)],
+        sa_free=[draw(st.floats(0, 5, width=32)) for _ in range(M)],
+        B=draw(st.floats(4.0, 16.0, width=32)), M=M)
+
+
+@given(scenario())
+@settings(max_examples=60, deadline=None)
+def test_property_jax_matches_oracle(sc):
+    M = sc.pop("M")
+    (s, f), (sj, fj) = run_both(**sc, M=M)
+    n = len(sc["valid"])
+    assert np.all(np.isfinite(f)), "oracle must finish every valid SJ"
+    assert np.all(fj < INF / 2), "jax engine must finish every valid SJ"
+    np.testing.assert_allclose(sj, s, rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(fj, f, rtol=1e-3, atol=1e-2)
+
+
+@given(scenario())
+@settings(max_examples=40, deadline=None)
+def test_property_schedule_invariants(sc):
+    """No SA overlap; precedence respected; finish >= start + cost."""
+    M = sc.pop("M")
+    (s, f), _ = run_both(**sc, M=M)
+    n = len(sc["valid"])
+    cost = np.asarray(sc["cost"])
+    # duration can only stretch under contention, never shrink
+    assert np.all(f - s >= cost - 1e-6)
+    # SA exclusivity: intervals on the same SA don't overlap
+    for m in range(M):
+        idx = [i for i in range(n) if sc["assign"][i] == m]
+        iv = sorted((s[i], f[i]) for i in idx)
+        for (s1, f1), (s2, f2) in zip(iv, iv[1:]):
+            assert s2 >= f1 - 1e-6
+        for i in idx:  # respects initial busy period
+            assert s[i] >= sc["sa_free"][m] - 1e-6
+    # precedence
+    for i in range(n):
+        d = sc["dep"][i]
+        if d >= 0:
+            assert s[i] >= f[d] - 1e-6
+        assert s[i] >= sc["ready"][i] - 1e-6

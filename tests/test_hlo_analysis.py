@@ -1,0 +1,72 @@
+"""Collective-parser + roofline-term math tests (synthetic HLO text)."""
+import pytest
+
+from repro.launch import hlo_analysis as HA
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[256,1024]{1,0} parameter(0)
+  %ag = bf16[256,16384]{1,0} all-gather(%p0), dimensions={1}, replica_groups=[16,16]<=[256]
+  %ar = f32[128,128]{1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%sum
+  %rs = f32[8,16]{1,0} reduce-scatter(%y), replica_groups=[2,128]<=[256], dimensions={0}
+  %cp = bf16[64]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ags = (bf16[2,8]{1,0}, bf16[2,128]{1,0}) all-gather-start(%w), dimensions={1}, replica_groups=[16,16]<=[256]
+  %agd = bf16[2,128]{1,0} all-gather-done(%ags)
+  %a2a = f32[32,32]{1,0} all-to-all(%v), replica_groups=[32,8]<=[256], dimensions={0}
+}
+"""
+
+
+def test_shape_bytes():
+    assert HA._shape_bytes("bf16[256,1024]{1,0} ") == 256 * 1024 * 2
+    assert HA._shape_bytes("(f32[8], bf16[4,4]) ") == 32 + 32
+
+
+def test_group_size_formats():
+    assert HA._group_size("replica_groups=[16,16]<=[256]", 0) == 16
+    assert HA._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 0) == 4
+    assert HA._group_size("no groups here", 7) == 7
+
+
+def test_collective_stats_counts_and_traffic():
+    st = HA.collective_stats(HLO, 256)
+    assert st.counts["all-gather"] == 2          # sync + async start
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    assert st.counts["collective-permute"] == 1
+    assert st.counts["all-to-all"] == 1
+    # all-gather sync: Z=256*16384*2 bytes, n=16 -> (15/16) Z
+    z = 256 * 16384 * 2
+    expected_ag_sync = z * 15 / 16
+    # async start: takes the larger tuple entry (2x128 bf16)
+    z2 = 2 * 128 * 2
+    assert st.by_op["all-gather"] == pytest.approx(
+        expected_ag_sync + z2 * 15 / 16)
+    # all-reduce: 2*(n-1)/n * Z with n=4
+    assert st.by_op["all-reduce"] == pytest.approx(
+        2 * (128 * 128 * 4) * 3 / 4)
+
+
+def test_done_ops_not_double_counted():
+    st = HA.collective_stats(HLO, 256)
+    # only 2 all-gather entries despite the -done line
+    assert st.counts["all-gather"] == 2
+
+
+def test_roofline_terms_dominance():
+    cost = {"flops": 197e12, "bytes accessed": 0.0}
+    coll = HA.collective_stats("", 256)
+    t = HA.roofline_terms(cost, coll, 256)
+    assert t["dominant"] == "compute"
+    assert t["t_compute_s"] == pytest.approx(1.0)
+
+
+def test_model_flops_conventions():
+    from repro.configs.base import SHAPES
+    class C:                                     # minimal cfg stub
+        pass
+    mf_train = HA.model_flops(C, SHAPES["train_4k"], 10, None)
+    assert mf_train == 6.0 * 10 * 256 * 4096
+    mf_dec = HA.model_flops(C, SHAPES["decode_32k"], 10, None)
+    assert mf_dec == 2.0 * 10 * 128

@@ -1,0 +1,72 @@
+"""Optimizer + schedule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adamw, adafactor, make_schedule, global_norm,
+                         clip_by_norm)
+from repro.optim.schedules import cosine_lr, wsd_lr
+
+
+def _quadratic_converges(opt, steps=200, lr=0.05):
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array([1.5])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for t in range(steps):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params,
+                                      jnp.asarray(t), jnp.asarray(lr))
+    return float(loss(params))
+
+
+def test_adamw_converges_quadratic():
+    assert _quadratic_converges(adamw(weight_decay=0.0)) < 1e-3
+
+
+def test_adafactor_converges_quadratic():
+    assert _quadratic_converges(adafactor()) < 1e-2
+
+
+def test_adamw_bf16_moments_still_converge():
+    o = adamw(weight_decay=0.0, moment_dtype=jnp.bfloat16)
+    assert _quadratic_converges(o) < 1e-2
+
+
+def test_adafactor_factored_state_is_small():
+    opt = adafactor(min_dim=4)
+    params = {"w": jnp.zeros((256, 512))}
+    state = opt.init(params)
+    n_state = sum(x.size for x in jax.tree.leaves(state))
+    assert n_state == 256 + 512                  # vs 2*256*512 for adam
+
+
+def test_clip_by_norm():
+    g = {"a": jnp.array([3.0, 4.0])}            # norm 5
+    clipped, norm = clip_by_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_lr(s, peak=1.0, warmup=10, total=100))
+           for s in range(100)]
+    assert lrs[0] > 0                            # nonzero at step 0
+    assert max(lrs) == pytest.approx(1.0, rel=0.05)
+    assert lrs[-1] < 0.2 and lrs[-1] >= 0.099    # decays to the floor
+
+
+def test_wsd_schedule_plateau_then_decay():
+    lrs = [float(wsd_lr(s, peak=1.0, warmup=10, total=100))
+           for s in range(100)]
+    plateau = lrs[20:85]
+    assert all(abs(v - 1.0) < 1e-6 for v in plateau)   # stable leg
+    assert lrs[-1] < 0.05                              # sharp decay leg
+
+
+def test_make_schedule_dispatch():
+    assert float(make_schedule("wsd", peak=2.0)(500)) == pytest.approx(2.0)
+    assert float(make_schedule("cosine", peak=2.0)(0)) < 2.0

@@ -1,0 +1,133 @@
+"""Partition-rule tests: logical classification + divisibility fallback.
+
+These run on the single CPU device using abstract meshes built from
+``jax.sharding.Mesh`` over a reshaped device list — PartitionSpec
+resolution (the thing under test) needs no real multi-device backend:
+we test ``logical_spec`` math directly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.models import partition as PT
+from repro.models import sharding as shd
+from repro.models.model import build_model
+
+
+class _FakeMesh:
+    """Duck-typed mesh for logical_spec (needs .shape mapping only)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+def test_logical_spec_divisibility_fallback():
+    rules = shd.make_rules(False)
+    mesh = _FakeMesh(data=16, model=16)
+    # kv_heads=8 is NOT divisible by model=16 -> replicated, seq picks it up
+    spec = shd.logical_spec((128, 8, 32768, 128),
+                            ("batch", "cache_kv", "cache_seq", None),
+                            mesh, rules)
+    assert spec[0] == "data"
+    assert spec[1] is None                 # fallback
+    assert spec[2] == "model"              # sequence sharding takes over
+    # kv_heads=16 divisible -> heads sharded, seq left alone
+    spec = shd.logical_spec((128, 16, 32768, 128),
+                            ("batch", "cache_kv", "cache_seq", None),
+                            mesh, rules)
+    assert spec[1] == "model" and spec[2] is None
+
+
+def test_logical_spec_never_reuses_axis():
+    rules = shd.make_rules(False)
+    mesh = _FakeMesh(data=4, model=4)
+    spec = shd.logical_spec((64, 64), ("model", "model"), mesh, rules)
+    used = [s for s in spec if s is not None]
+    assert used.count("model") <= 1
+
+
+def test_param_classification_dense():
+    cfg = get_arch("deepseek-7b", smoke=True)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    ax = PT.logical_axes(params)
+    assert ax["embed"] == ("vocab", "fsdp")
+    # stacked layer params get a leading None for the scan dim
+    assert ax["stack"]["mixer"]["wq"] == (None, "fsdp", "heads", None)
+    assert ax["stack"]["ffn"]["w_down"] == (None, "mlp", "fsdp")
+    assert ax["final_norm"]["scale"] == (None,)
+
+
+def test_param_classification_moe_and_ssm():
+    moe = jax.eval_shape(build_model(get_arch("olmoe-1b-7b", True)).init,
+                         jax.random.PRNGKey(0))
+    ax = PT.logical_axes(moe)
+    assert ax["stack"]["ffn"]["w_up"] == (None, "expert", "fsdp", "mlp")
+    # regression: a dense arch whose n_layers divides the model axis must
+    # NOT shard the stacked layer dim (rank-3 MLP != MoE experts)
+    vlm = jax.eval_shape(build_model(get_arch("internvl2-76b", True)).init,
+                         jax.random.PRNGKey(0))
+    axv = PT.logical_axes(vlm)
+    assert axv["stack"]["ffn"]["w_up"] == (None, "fsdp", "mlp")
+    ssm = jax.eval_shape(build_model(get_arch("mamba2-2.7b", True)).init,
+                         jax.random.PRNGKey(0))
+    ax2 = PT.logical_axes(ssm)
+    assert ax2["stack"]["mixer"]["w_in"] == (None, "fsdp", "model")
+    assert ax2["stack"]["mixer"]["A_log"] == (None, "ssm_heads")
+
+
+def test_cache_v_leaf_not_stripped_as_optimizer_state():
+    """Regression: the decode V-cache key is 'v' — it must classify by
+    the CACHE rule, not lose its suffix like an adafactor moment."""
+    import jax.numpy as jnp
+    cache = {"self": {"k": jax.ShapeDtypeStruct((2, 4, 8, 16, 8),
+                                                jnp.bfloat16),
+                      "v": jax.ShapeDtypeStruct((2, 4, 8, 16, 8),
+                                                jnp.bfloat16)}}
+    rules = shd.make_rules(False)
+    mesh = _FakeMesh(data=4, model=2)
+
+    def spec_of(path, x):
+        logical = PT._classify(path, len(x.shape), PT._CACHE_RULES,
+                               strip_state=False)
+        return logical
+
+    out = jax.tree_util.tree_map_with_path(spec_of, cache)
+    assert out["self"]["v"] == out["self"]["k"]          # same rule
+    assert out["self"]["v"][-3:] == ("cache_kv", "cache_seq", None)
+
+
+def test_adafactor_state_inherits_param_rule():
+    """Regression: .../wq/v_row must not lower replicated (405B OOM)."""
+    from repro.optim import adafactor
+    import jax.numpy as jnp
+    cfg = get_arch("llama3-405b", smoke=True)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = adafactor(min_dim=4)
+    state = jax.eval_shape(opt.init, params)
+    ax = PT.logical_axes(state)
+    wq = ax["stack"]["mixer"]["wq"]
+    # param rule (None, fsdp, heads, None): v_row drops last dim,
+    # v_col drops second-to-last
+    assert wq["v_row"] == (None, "fsdp", "heads")
+    assert wq["v_col"] == (None, "fsdp", None)
+    # adamw-style m/v (outer key) still classified via the param key
+    ax2 = PT.logical_axes({"m": params})
+    assert ax2["m"]["stack"]["mixer"]["wq"] == (None, "fsdp", "heads", None)
+
+
+def test_multipod_rules_fold_pod_into_dp():
+    rules = shd.make_rules(True)
+    assert rules.axes_for("batch") == ("pod", "data")
+    mesh = _FakeMesh(pod=2, data=16, model=16)
+    spec = shd.logical_spec((256, 4096), ("batch", None), mesh, rules)
+    assert spec[0] == ("pod", "data")
+
+
+def test_rule_overrides():
+    rules = shd.make_rules(False, overrides={"expert": ("data",)})
+    assert rules.axes_for("expert") == ("data",)

@@ -1,0 +1,112 @@
+"""RELMAS policy + DDPG learner tests (paper Sec. 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ddpg as D
+from repro.core import policy as P
+
+PCFG = P.PolicyConfig(feat_dim=16, act_dim=7, hidden=32)
+KEY = jax.random.PRNGKey(0)
+
+
+def _state_batch(B=4, T=9):
+    ks = jax.random.split(KEY, 4)
+    s = jax.random.normal(ks[0], (B, T, PCFG.feat_dim))
+    mask = jnp.arange(T)[None, :] < jnp.array([[T], [T - 2], [5], [3]])[:B]
+    a = jnp.tanh(jax.random.normal(ks[1], (B, T - 1, PCFG.act_dim)))
+    r = jax.random.normal(ks[2], (B,))
+    return dict(s=s, mask=mask, a=a, r=r, s2=s, mask2=mask)
+
+
+def test_actor_output_range_and_shape():
+    params = P.init_actor(KEY, PCFG)
+    feats = jax.random.normal(KEY, (9, PCFG.feat_dim))
+    mask = jnp.ones((9,), bool)
+    a = P.actor_apply(params, PCFG, feats, mask)
+    assert a.shape == (8, PCFG.act_dim)              # primer discarded
+    assert float(jnp.max(jnp.abs(a))) <= 1.0         # tanh range
+
+
+def test_masked_tail_does_not_change_valid_prefix():
+    """Padded RQ slots must not affect decisions for real slots."""
+    params = P.init_actor(KEY, PCFG)
+    T = 9
+    feats = jax.random.normal(KEY, (T, PCFG.feat_dim))
+    mask = jnp.arange(T) < 5
+    a1 = P.actor_apply(params, PCFG, feats, mask)
+    feats2 = feats.at[5:].set(123.0)                 # garbage in padding
+    a2 = P.actor_apply(params, PCFG, feats2, mask)
+    np.testing.assert_allclose(np.asarray(a1[:4]), np.asarray(a2[:4]),
+                               atol=1e-6)
+
+
+def test_paper_mac_count():
+    """Sec 5.3: ~316,288 MACs per timestep at h=256 (M=6 SAs)."""
+    cfg = P.PolicyConfig(feat_dim=16, act_dim=7, hidden=256)
+    macs = P.actor_macs_per_timestep(cfg)
+    assert abs(macs - 316_288) / 316_288 < 0.05
+
+
+def test_critic_scalar_q_uses_last_valid_step():
+    params = P.init_critic(KEY, PCFG)
+    T = 9
+    feats = jax.random.normal(KEY, (T, PCFG.feat_dim))
+    acts = jnp.zeros((T - 1, PCFG.act_dim))
+    mask = jnp.arange(T) < 6
+    q = P.critic_apply(params, PCFG, feats, acts, mask)
+    assert q.shape == ()
+    # changing steps beyond the mask must not change Q
+    feats2 = feats.at[7:].set(9.0)
+    q2 = P.critic_apply(params, PCFG, feats2, acts, mask)
+    assert float(jnp.abs(q - q2)) < 1e-6
+
+
+def test_ddpg_update_improves_critic_fit():
+    cfg = D.DDPGConfig(policy=PCFG, critic_lr=3e-3, actor_lr=1e-4)
+    state = D.init_ddpg(KEY, cfg)
+    batch = {k: jnp.asarray(v) for k, v in _state_batch().items()}
+    losses = []
+    for _ in range(30):
+        state, info = D.ddpg_update_jit(state, cfg, batch)
+        losses.append(float(info["critic_loss"]))
+    assert losses[-1] < losses[0] * 0.5
+    assert np.isfinite(losses).all()
+
+
+def test_target_networks_soft_update():
+    cfg = D.DDPGConfig(policy=PCFG, tau=0.5)
+    state = D.init_ddpg(KEY, cfg)
+    batch = {k: jnp.asarray(v) for k, v in _state_batch().items()}
+    new, _ = D.ddpg_update(state, cfg, batch)
+    # target moved toward new actor by tau
+    w_t0 = state.target_actor["fc2"]["w"]
+    w_t1 = new.target_actor["fc2"]["w"]
+    w_a1 = new.actor["fc2"]["w"]
+    np.testing.assert_allclose(np.asarray(w_t1),
+                               np.asarray(0.5 * w_t0 + 0.5 * w_a1),
+                               atol=1e-6)
+
+
+def test_act_exploration_clipped():
+    params = P.init_actor(KEY, PCFG)
+    feats = jax.random.normal(KEY, (5, PCFG.feat_dim))
+    mask = jnp.ones((5,), bool)
+    a, prio, sa = D.act(params, PCFG, feats, mask, key=KEY, sigma=5.0)
+    assert float(jnp.max(jnp.abs(a))) <= 1.0
+    assert sa.dtype == jnp.int32 and sa.shape == (4,)
+    assert int(sa.max()) < PCFG.act_dim - 1
+
+
+def test_replay_buffer_ring():
+    from repro.core.replay import ReplayBuffer
+    buf = ReplayBuffer(capacity=8, seq_len=4, feat_dim=3, act_dim=2)
+    for i in range(11):
+        z = np.full((4, 3), i, np.float32)
+        buf.add(z, np.ones(4, bool), np.zeros((3, 2), np.float32),
+                float(i), z, np.ones(4, bool))
+    assert len(buf) == 8
+    s = buf.sample(16)
+    assert s["s"].shape == (16, 4, 3)
+    assert s["r"].min() >= 3                # oldest entries evicted
