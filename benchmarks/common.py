@@ -9,7 +9,7 @@ import numpy as np
 from repro.ckpt import restore_checkpoint
 from repro.core import baselines as BL
 from repro.core import policy as P
-from repro.core.rollout import (make_baseline_period, make_policy_period,
+from repro.core.rollout import (evaluate_batch, evaluate_batch_baseline,
                                 run_episode)
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.env import EnvConfig, SchedulingEnv
@@ -40,7 +40,7 @@ CKPTS = {w: _ckpt(w) for w in ("light", "heavy", "mixed")}
 def make_env(workload: str, *, qos: str = "medium", qos_factor: float = 3.0,
              load: float = 0.9, bandwidth: float = 16.0,
              t_s_us: float = 500.0, periods: int = 60, max_rq: int = 96,
-             max_jobs: int = 64) -> SchedulingEnv:
+             max_jobs: int = 64, scenario: str = "default") -> SchedulingEnv:
     """Defaults MATCH launch/rl_train.py's training environment — the
     trained checkpoints are evaluated in-distribution (the paper trains
     RELMAS per scenario); shorter horizons cannot even complete a Heavy
@@ -50,7 +50,7 @@ def make_env(workload: str, *, qos: str = "medium", qos_factor: float = 3.0,
                      max_jobs=max_jobs, bandwidth_gbps=bandwidth)
     arr = ArrivalConfig(max_jobs=max_jobs, load=load, qos_factor=qos_factor,
                         qos_level=qos, horizon_us=ecfg.horizon_us,
-                        slack_us=2.0 * t_s_us)
+                        slack_us=2.0 * t_s_us, scenario=scenario)
     return SchedulingEnv(reg, ecfg, arr)
 
 
@@ -71,17 +71,15 @@ def load_relmas(env: SchedulingEnv, workload: str, hidden: int = 64):
 
 def eval_policy(env: SchedulingEnv, name: str, *, workload: str,
                 seeds=range(7000, 7003), magma_cfg=None) -> dict:
-    """-> mean metrics for one scheduler on one env."""
-    out: dict[str, list] = {}
+    """-> mean metrics for one scheduler on one env.
+
+    RELMAS and the one-shot heuristics run through the batched
+    device-resident runner (one jitted call for all seeds); MAGMA's
+    per-period genetic search stays on the legacy per-period loop.
+    """
     if name == "relmas":
         params, pcfg, trained = load_relmas(env, workload)
-        period = make_policy_period(env, pcfg)
-        for s in seeds:
-            m, _ = run_episode(env, period, np.random.default_rng(s),
-                               params=params, key=jax.random.PRNGKey(s))
-            for k, v in m.items():
-                out.setdefault(k, []).append(v)
-        res = {k: float(np.mean(v)) for k, v in out.items()}
+        res = evaluate_batch(env, pcfg, params, seeds)
         res["trained"] = trained
         return res
     if name == "magma":
@@ -92,17 +90,13 @@ def eval_policy(env: SchedulingEnv, name: str, *, workload: str,
                 return BL.magma(slots, st, env, mcfg)
             return env.period(state, trace, act_fn)
 
+        out: dict[str, list] = {}
         for s in seeds:
             m, _ = run_episode(env, period, np.random.default_rng(s))
             for k, v in m.items():
                 out.setdefault(k, []).append(v)
         return {k: float(np.mean(v)) for k, v in out.items()}
-    period = make_baseline_period(env, BL.BASELINES[name])
-    for s in seeds:
-        m, _ = run_episode(env, period, np.random.default_rng(s))
-        for k, v in m.items():
-            out.setdefault(k, []).append(v)
-    return {k: float(np.mean(v)) for k, v in out.items()}
+    return evaluate_batch_baseline(env, BL.BASELINES[name], seeds)
 
 
 def geomean_improvement(a: list[float], b: list[float]) -> float:

@@ -15,7 +15,11 @@ from benchmarks.common import eval_policy, geomean_improvement, make_env
 POLICIES = ("fcfs", "prema", "herald", "magma", "relmas")
 
 
-def run(*, quick: bool = True, with_magma: bool = True) -> dict:
+def run(*, quick: bool = True, with_magma: bool = True,
+        scenario: str = "default") -> dict:
+    """All non-MAGMA cells run through the batched device-resident
+    evaluator (benchmarks/common.eval_policy); ``scenario`` picks an
+    arrival-process preset (see repro.sim.arrivals.SCENARIOS)."""
     workloads = ("light", "heavy", "mixed")
     qos_levels = ("high", "medium", "low")
     seeds = range(7000, 7002 if quick else 7005)
@@ -31,7 +35,7 @@ def run(*, quick: bool = True, with_magma: bool = True) -> dict:
                 continue
             from benchmarks.common import EVAL_LOAD, EVAL_QOS_FACTOR
             env = make_env(w, qos=q, periods=periods, load=EVAL_LOAD,
-                           qos_factor=EVAL_QOS_FACTOR)
+                           qos_factor=EVAL_QOS_FACTOR, scenario=scenario)
             row = {}
             for p in POLICIES:
                 if p == "magma" and not with_magma:

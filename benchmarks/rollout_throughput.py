@@ -1,0 +1,157 @@
+"""Rollout throughput: seed collection pipeline vs device-resident batch.
+
+Measures scheduler-periods simulated per second for the full
+experience-collection pipeline (policy rollout + replay write):
+
+- BEFORE (the seed repo's path): ``run_episode`` drives one jitted call
+  per period from Python, round-trips every transition to the host, and
+  writes the NumPy ``ReplayBuffer`` one transition at a time; the
+  contention engine is the seed's ``segment_*`` formulation
+  (``simulate_jax_segments``).
+- AFTER (this repo's path): ``make_rollout_batch`` runs the whole batch
+  of episodes in one jitted call (``lax.scan`` over periods, ``vmap``
+  over episodes, sharded over local devices when available) with the
+  one-hot engine, and ring-writes the stacked transitions into the
+  device-resident ``DeviceReplay`` in one scatter.
+- ``loop_current`` (reported for transparency): the per-period loop on
+  top of the NEW engine — isolates how much of the speedup comes from
+  batching vs. the engine rewrite.
+
+Both arms run the same RELMAS actor with exploration noise and collect
+transitions (the training configuration).  Compile time is excluded via
+one untimed warmup call per arm.  Acceptance bar for the batched
+pipeline PR: >= 5x periods/sec at batch >= 8 on CPU.
+
+Usage:
+  PYTHONPATH=src python benchmarks/rollout_throughput.py --batch 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# Episodes shard over XLA host devices (one per core). Must be set
+# before jax initializes; a no-op when jax is already imported (e.g.
+# when driven from benchmarks/run.py inside a single-device test run).
+if "jax" not in sys.modules and os.environ.get("JAX_PLATFORMS", "") != "tpu":
+    _cores = os.cpu_count() or 1
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags and _cores > 1:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={_cores}")
+
+import jax
+import numpy as np
+
+from benchmarks.common import make_env
+from repro.core import policy as P
+from repro.core.replay import DeviceReplay, ReplayBuffer
+from repro.core.rollout import (make_policy_period, make_rollout_batch,
+                                run_episode)
+from repro.sim import engine as engine_mod
+import repro.sim.env as env_mod
+
+
+def run(*, batch: int = 32, legacy_episodes: int = 3, repeats: int = 3,
+        periods: int = 60, max_rq: int = 96, max_jobs: int = 64,
+        hidden: int = 64, sigma: float = 0.2, seed: int = 0,
+        capacity: int = 4000) -> dict:
+    pcfg = None
+
+    def fresh_env():
+        env = make_env("light", periods=periods, max_rq=max_rq,
+                       max_jobs=max_jobs)
+        nonlocal pcfg
+        pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
+                              hidden=hidden)
+        return env
+
+    # ---- BEFORE: seed pipeline (segment engine + per-period loop +
+    # host replay writes).  The engine is swapped at the module level;
+    # a fresh env/period_fn pair keeps the jit caches of the arms apart.
+    env_mod.simulate_jax = engine_mod.simulate_jax_segments
+    try:
+        env = fresh_env()
+        params = P.init_actor(jax.random.PRNGKey(seed), pcfg)
+        period_fn = make_policy_period(env, pcfg)
+        buf = ReplayBuffer(capacity, env.seq_len, env.feat_dim, env.act_dim)
+
+        def legacy_episode(i):
+            _, trans = run_episode(env, period_fn,
+                                   np.random.default_rng(seed + i),
+                                   params=params, key=jax.random.PRNGKey(i),
+                                   sigma=sigma, collect=True)
+            for tr in trans:
+                buf.add(tr["s"], tr["mask"], tr["a"], tr["r"], tr["s2"],
+                        tr["mask2"])
+
+        legacy_episode(0)                                # warmup/compile
+        t0 = time.perf_counter()
+        for i in range(legacy_episodes):
+            legacy_episode(1 + i)
+        pps_seed = legacy_episodes * periods / (time.perf_counter() - t0)
+    finally:
+        env_mod.simulate_jax = engine_mod.simulate_jax
+
+    # ---- transparency arm: per-period loop on the NEW engine
+    env = fresh_env()
+    params = P.init_actor(jax.random.PRNGKey(seed), pcfg)
+    period_fn = make_policy_period(env, pcfg)
+    run_episode(env, period_fn, np.random.default_rng(seed), params=params,
+                key=jax.random.PRNGKey(seed), sigma=sigma, collect=True)
+    t0 = time.perf_counter()
+    for i in range(legacy_episodes):
+        run_episode(env, period_fn, np.random.default_rng(seed + 1 + i),
+                    params=params, key=jax.random.PRNGKey(i), sigma=sigma,
+                    collect=True)
+    pps_loop = legacy_episodes * periods / (time.perf_counter() - t0)
+
+    # ---- AFTER: batched device-resident pipeline ------------------------
+    devs = jax.local_devices()
+    devices = devs if len(devs) > 1 and batch % len(devs) == 0 else None
+    rollout_fn = make_rollout_batch(env, pcfg, devices=devices)
+    dbuf = DeviceReplay(capacity, env.seq_len, env.feat_dim, env.act_dim)
+
+    def batched_round(i):
+        traces, states = env.new_episodes(np.random.default_rng(seed + i),
+                                          batch)
+        _, trans, _, _ = rollout_fn(params, states, traces,
+                                    jax.random.PRNGKey(100 + i), sigma)
+        dbuf.add_batch(trans)
+        jax.block_until_ready(dbuf.data["ptr"])
+
+    batched_round(0)                                     # warmup/compile
+    t0 = time.perf_counter()
+    for i in range(repeats):
+        batched_round(1 + i)
+    pps_batch = repeats * batch * periods / (time.perf_counter() - t0)
+
+    res = dict(batch=batch, periods=periods, devices=len(devs),
+               periods_per_sec_legacy=round(pps_seed, 1),
+               periods_per_sec_loop_current=round(pps_loop, 1),
+               periods_per_sec_batched=round(pps_batch, 1),
+               speedup=round(pps_batch / pps_seed, 2))
+    print("rollout_throughput," + json.dumps(res), flush=True)
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--legacy-episodes", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--periods", type=int, default=60)
+    ap.add_argument("--max-rq", type=int, default=96)
+    ap.add_argument("--max-jobs", type=int, default=64)
+    ap.add_argument("--hidden", type=int, default=64)
+    args = ap.parse_args(argv)
+    run(batch=args.batch, legacy_episodes=args.legacy_episodes,
+        repeats=args.repeats, periods=args.periods, max_rq=args.max_rq,
+        max_jobs=args.max_jobs, hidden=args.hidden)
+
+
+if __name__ == "__main__":
+    main()

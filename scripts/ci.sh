@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md). Run from the repo root:
+#   scripts/ci.sh
+# Extra pytest args pass through: scripts/ci.sh -k engine
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q "$@"

@@ -18,12 +18,14 @@ policy itself is tiny (0.04% of an AlexNet) and is replicated.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import policy as P
+from repro.core.replay import replay_sample
 
 Params = dict[str, Any]
 
@@ -152,3 +154,26 @@ def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch) -> tuple["DDPGState", 
 
 
 ddpg_update_jit = jax.jit(ddpg_update, static_argnames=("cfg",))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "num_updates", "batch_size"))
+def ddpg_update_scan(state: DDPGState, cfg: DDPGConfig, buf: dict, key,
+                     num_updates: int,
+                     batch_size: int) -> tuple[DDPGState, dict]:
+    """Fuse ``num_updates`` DDPG updates into one ``jax.lax.scan``.
+
+    ``buf`` is the device replay buffer dict (see
+    ``repro.core.replay``); each scan step draws its own uniform sample
+    keyed by a split of ``key`` and applies :func:`ddpg_update`, so the
+    whole sample -> update -> soft-target chain runs on device in a
+    single dispatch.  Returns (new_state, infos) with infos stacked
+    over the (num_updates,) axis.
+    """
+    keys = jax.random.split(key, num_updates)
+
+    def step(st, k):
+        batch = replay_sample(buf, k, batch_size)
+        return ddpg_update(st, cfg, batch)
+
+    return jax.lax.scan(step, state, keys)

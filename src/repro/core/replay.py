@@ -1,15 +1,106 @@
-"""Experience replay buffer (paper Fig. 2.11).
+"""Experience replay (paper Fig. 2.11) — device-resident ring buffer.
 
-Host-side NumPy ring buffer for (s, a, r, s') tuples with fixed padded
-sequence length T (= 1 primer + max_rq sub-jobs).  ``s'`` is the
-residual-RQ-only encoding written by the environment (Sec. 4.2).
+The buffer is a plain dict pytree of ``jnp`` arrays plus integer
+``ptr``/``size`` scalars; all operations are pure jitted functions so
+the whole collect -> store -> sample -> update pipeline stays on device
+with zero host round-trips:
+
+- :func:`replay_init`       allocate an empty buffer;
+- :func:`replay_add_batch`  scatter N transitions at
+  ``(ptr + arange(N)) % capacity`` (ring semantics; N <= capacity);
+- :func:`replay_sample`     uniform gather keyed by ``jax.random``.
+
+``s2`` is the residual-RQ-only encoding written by the environment
+(Sec. 4.2); sequences are fixed padded length T (= 1 primer + max_rq
+sub-jobs).
+
+:class:`DeviceReplay` is a thin stateful wrapper over the functional
+ops; :class:`ReplayBuffer` is the legacy host-side NumPy ring kept for
+compatibility (examples, tests, non-JAX consumers).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+_FIELDS = ("s", "mask", "a", "r", "s2", "mask2")
+
+
+def replay_init(capacity: int, seq_len: int, feat_dim: int,
+                act_dim: int) -> dict[str, jnp.ndarray]:
+    T, F, G = seq_len, feat_dim, act_dim
+    return dict(
+        s=jnp.zeros((capacity, T, F), jnp.float32),
+        mask=jnp.zeros((capacity, T), bool),
+        a=jnp.zeros((capacity, T - 1, G), jnp.float32),
+        r=jnp.zeros((capacity,), jnp.float32),
+        s2=jnp.zeros((capacity, T, F), jnp.float32),
+        mask2=jnp.zeros((capacity, T), bool),
+        ptr=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+@jax.jit
+def replay_add_batch(buf: dict, batch: dict) -> dict:
+    """Ring-write a stacked batch of transitions (leading axis N).
+
+    N must not exceed the capacity (a single scatter cannot wrap the
+    ring more than once); the training loop's batch_episodes * periods
+    is far below any sane capacity.
+    """
+    cap = buf["r"].shape[0]
+    n = batch["r"].shape[0]
+    idx = (buf["ptr"] + jnp.arange(n)) % cap
+    out = {k: buf[k].at[idx].set(batch[k].astype(buf[k].dtype))
+           for k in _FIELDS}
+    out["ptr"] = ((buf["ptr"] + n) % cap).astype(jnp.int32)
+    out["size"] = jnp.minimum(buf["size"] + n, cap).astype(jnp.int32)
+    return out
+
+
+def _gather(buf: dict, idx) -> dict:
+    return {k: buf[k][idx] for k in _FIELDS}
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size",))
+def replay_sample(buf: dict, key, batch_size: int) -> dict:
+    """Uniform sample of ``batch_size`` stored transitions (traceable)."""
+    idx = jax.random.randint(key, (batch_size,), 0,
+                             jnp.maximum(buf["size"], 1))
+    return _gather(buf, idx)
+
+
+class DeviceReplay:
+    """Stateful convenience wrapper over the functional device buffer."""
+
+    def __init__(self, capacity: int, seq_len: int, feat_dim: int,
+                 act_dim: int):
+        self.capacity = capacity
+        self.data = replay_init(capacity, seq_len, feat_dim, act_dim)
+
+    def add_batch(self, batch: dict) -> None:
+        """batch: transitions stacked over a leading axis; extra leading
+        axes (e.g. (episodes, periods, ...)) are flattened first."""
+        extra = batch["r"].ndim - 1
+        if extra:
+            batch = {k: v.reshape((-1,) + v.shape[1 + extra:])
+                     for k, v in batch.items() if k in _FIELDS}
+        self.data = replay_add_batch(self.data, batch)
+
+    def sample(self, key, batch_size: int) -> dict:
+        return replay_sample(self.data, key, batch_size)
+
+    def __len__(self) -> int:
+        return int(self.data["size"])
 
 
 class ReplayBuffer:
+    """Legacy host-side NumPy ring buffer (kept for compatibility)."""
+
     def __init__(self, capacity: int, seq_len: int, feat_dim: int,
                  act_dim: int, seed: int = 0):
         self.capacity = capacity

@@ -1,4 +1,23 @@
-"""Episode rollout runners: evaluation + DDPG experience collection."""
+"""Episode rollout runners: batched device-resident collection + eval.
+
+Architecture (device-resident pipeline PR): the hot path is
+``make_rollout_batch`` / ``make_evaluate_batch`` — one jitted call runs
+``batch`` episodes end-to-end on device: ``jax.lax.scan`` over periods
+(``SchedulingEnv.episode``) inside ``jax.vmap`` over stacked
+traces/states, with the final drop pass and metrics computed inside the
+trace.  Collection returns stacked transitions shaped
+``(batch, periods, ...)``, ready for the device replay buffer's
+``add_batch`` — no per-period host round-trips, no Python loop.
+
+The legacy per-period runners (``make_policy_period`` /
+``make_baseline_period`` / ``run_episode`` / ``evaluate``) are kept as
+thin compatibility wrappers; ``benchmarks/rollout_throughput.py``
+measures the two paths against each other.
+
+Compiled runners are cached per environment instance (the jit cache is
+keyed on the closed-over env/policy config), so repeated calls from
+training loops and benchmarks do not re-trace.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,10 +28,169 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import policy as P
-from repro.core.ddpg import DDPGConfig
 from repro.sim.env import SchedulingEnv
 
+Metrics = dict[str, jnp.ndarray]
 
+
+# --------------------------------------------------------------------------
+# batched device-resident runners (the new hot path)
+# --------------------------------------------------------------------------
+def _policy_act_fn(params, pcfg: P.PolicyConfig):
+    """Per-period actor; ``noise`` (the per-period scan input) is the
+    pre-drawn exploration noise — RNG inside the period scan costs real
+    time on CPU, so the whole episode block is drawn in one call."""
+    def act_fn(feats, mask, slots, st, noise):
+        a = jnp.clip(P.actor_apply(params, pcfg, feats, mask) + noise,
+                     -1.0, 1.0)
+        prio = a[:, 0]
+        sa = jnp.argmax(a[:, 1:], axis=-1).astype(jnp.int32)
+        return a, prio, sa
+    return act_fn
+
+
+def _runner_cache(env: SchedulingEnv) -> dict:
+    cache = getattr(env, "_runner_cache", None)
+    if cache is None:
+        cache = {}
+        env._runner_cache = cache
+    return cache
+
+
+def make_rollout_batch(env: SchedulingEnv, pcfg: P.PolicyConfig,
+                       collect: bool = True, devices=None):
+    """Jitted batched collector.
+
+    Returns ``rollout_batch(params, states, traces, key, sigma)`` ->
+    (final_states, transitions, infos, metrics), everything stacked over
+    the leading batch axis (transitions over (batch, periods, ...));
+    ``key`` is a single PRNG key — the whole batch's exploration noise
+    is drawn in one vectorized call.
+
+    With ``devices`` (a list of >1 JAX devices) the batch additionally
+    shards over a ``pmap`` device axis — episodes are independent, so
+    experience collection is embarrassingly data-parallel (batch must
+    divide evenly by the device count).
+    """
+    ndev = len(devices) if devices else 1
+    key_ = ("rollout_batch", pcfg, collect, ndev)
+    cache = _runner_cache(env)
+    if key_ in cache:
+        return cache[key_]
+
+    def _episodes(params, states, traces, noise):
+        def one(state, trace, ep_noise):
+            return env.episode(state, trace, _policy_act_fn(params, pcfg),
+                               ep_noise, collect=collect)
+        return jax.vmap(one)(states, traces, noise)
+
+    if ndev <= 1:
+        @jax.jit
+        def rollout_batch(params, states, traces, key, sigma):
+            batch = states["t"].shape[0]
+            noise = sigma * jax.random.normal(
+                key, (batch, env.cfg.periods, env.cfg.max_rq, env.act_dim))
+            return _episodes(params, states, traces, noise)
+    else:
+        @functools.partial(jax.pmap, in_axes=(None, 0, 0, 0, None),
+                           devices=devices)
+        def _prun(params, states, traces, key, sigma):
+            per_dev = states["t"].shape[0]
+            noise = sigma * jax.random.normal(
+                key, (per_dev, env.cfg.periods, env.cfg.max_rq, env.act_dim))
+            return _episodes(params, states, traces, noise)
+
+        def rollout_batch(params, states, traces, key, sigma):
+            batch = states["t"].shape[0]
+            if batch % ndev:
+                raise ValueError(f"batch {batch} not divisible by "
+                                 f"{ndev} devices")
+            shard = lambda x: x.reshape((ndev, batch // ndev) + x.shape[1:])
+            out = _prun(params, jax.tree.map(shard, states),
+                        jax.tree.map(shard, traces),
+                        jax.random.split(key, ndev), sigma)
+            unshard = lambda x: x.reshape((batch,) + x.shape[2:])
+            return jax.tree.map(unshard, out)
+
+    cache[key_] = rollout_batch
+    return rollout_batch
+
+
+def make_evaluate_batch(env: SchedulingEnv, pcfg: P.PolicyConfig):
+    """Jitted batched evaluator (no noise, no transition collection).
+
+    Returns ``eval_fn(params, states, traces)`` -> metrics stacked over
+    the batch axis.
+    """
+    key_ = ("evaluate_batch", pcfg)
+    cache = _runner_cache(env)
+    if key_ in cache:
+        return cache[key_]
+
+    @jax.jit
+    def eval_fn(params, states, traces) -> Metrics:
+        def one(state, trace):
+            no_noise = jnp.zeros((env.cfg.periods, 1, 1))
+            *_, metrics = env.episode(
+                state, trace, _policy_act_fn(params, pcfg),
+                no_noise, collect=False)
+            return metrics
+        return jax.vmap(one)(states, traces)
+
+    cache[key_] = eval_fn
+    return eval_fn
+
+
+def make_baseline_episode_batch(env: SchedulingEnv, baseline_fn: Callable):
+    """Jitted batched episode runner for a heuristic baseline."""
+    key_ = ("baseline_batch", baseline_fn)
+    cache = _runner_cache(env)
+    if key_ in cache:
+        return cache[key_]
+
+    @jax.jit
+    def eval_fn(states, traces) -> Metrics:
+        def one(state, trace):
+            def act_fn(feats, mask, slots, st, _):
+                return baseline_fn(slots, st, env)
+            dummy = jnp.zeros((env.cfg.periods,))
+            *_, metrics = env.episode(state, trace, act_fn, dummy,
+                                      collect=False)
+            return metrics
+        return jax.vmap(one)(states, traces)
+
+    cache[key_] = eval_fn
+    return eval_fn
+
+
+def stack_episodes(env: SchedulingEnv, seeds):
+    """One fresh episode per seed, tree-stacked over the batch axis."""
+    pairs = [env.new_episode(np.random.default_rng(int(s))) for s in seeds]
+    traces = jax.tree.map(lambda *xs: jnp.stack(xs), *[p[0] for p in pairs])
+    states = jax.tree.map(lambda *xs: jnp.stack(xs), *[p[1] for p in pairs])
+    return traces, states
+
+
+def evaluate_batch(env: SchedulingEnv, pcfg: P.PolicyConfig, params,
+                   seeds) -> dict[str, float]:
+    """Mean policy metrics across seeds, one jitted device call."""
+    traces, states = stack_episodes(env, seeds)
+    metrics = make_evaluate_batch(env, pcfg)(params, states, traces)
+    return {k: float(jnp.mean(v)) for k, v in metrics.items()}
+
+
+def evaluate_batch_baseline(env: SchedulingEnv, baseline_fn: Callable,
+                            seeds) -> dict[str, float]:
+    """Mean heuristic-baseline metrics across seeds, one jitted call."""
+    traces, states = stack_episodes(env, seeds)
+    metrics = make_baseline_episode_batch(env, baseline_fn)(states, traces)
+    return {k: float(jnp.mean(v)) for k, v in metrics.items()}
+
+
+# --------------------------------------------------------------------------
+# legacy per-period runners (compatibility wrappers + the "before"
+# datapoint for benchmarks/rollout_throughput.py)
+# --------------------------------------------------------------------------
 def make_policy_period(env: SchedulingEnv, pcfg: P.PolicyConfig):
     """Jitted one-period step with the RELMAS actor (exploration optional)."""
 
@@ -46,7 +224,12 @@ def make_baseline_period(env: SchedulingEnv, baseline_fn: Callable,
 def run_episode(env: SchedulingEnv, period_fn, rng: np.random.Generator,
                 *, params=None, key=None, sigma: float = 0.0,
                 collect: bool = False):
-    """Run one episode. Returns (metrics, transitions|None)."""
+    """Run one episode with the legacy per-period Python loop.
+
+    Returns (metrics, transitions|None).  Prefer ``make_rollout_batch``
+    / ``evaluate_batch`` — this path pays one dispatch + host sync per
+    period and exists for compatibility and as the benchmark baseline.
+    """
     trace, state = env.new_episode(rng)
     transitions = [] if collect else None
     for _ in range(env.cfg.periods):

@@ -1,0 +1,21 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+The ``jax.experimental.pallas.tpu`` namespace renamed
+``TPUCompilerParams`` -> ``CompilerParams`` across JAX releases (the
+old name exists on 0.4.x, the new one on >= 0.5).  Kernels import
+:func:`tpu_compiler_params` instead of touching either class directly
+so the repo runs on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(*, dimension_semantics=None, **kwargs):
+    """Build a Pallas TPU CompilerParams object on any supported JAX."""
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return _CompilerParams(**kwargs)

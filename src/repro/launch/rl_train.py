@@ -1,18 +1,31 @@
 """RELMAS DDPG training driver (paper Sec. 4.2 / Sec. 5).
 
+Device-resident batched pipeline (see ``repro.core.rollout``): each
+round collects ``batch_episodes`` episodes in ONE jitted call
+(``lax.scan`` over periods inside ``vmap`` over episodes), ring-writes
+the stacked transitions into the device replay buffer
+(``DeviceReplay.add_batch``), and applies all of the round's DDPG
+updates in one fused ``ddpg_update_scan`` dispatch — no per-period or
+per-update host round-trips.  Evaluation runs through the jitted
+``evaluate_batch``.
+
+Knobs added by the batched pipeline:
+- ``--batch-episodes N``  episodes collected per device call (1 =
+  sequential semantics, just fused);
+- ``--scenario NAME``     arrival-process preset (``default``,
+  ``steady``, ``burst``, ``diurnal``, ``heavy_tail`` — see
+  ``repro.sim.arrivals``).
+
 Fault-tolerant training loop:
 - periodic atomic checkpoints (CheckpointManager) of the full learner
   state (+ replay is re-warmed on restart, which is sound for an
   off-policy learner);
 - ``--fail-at`` injects a crash for restart testing; on startup the
-  driver auto-resumes from the latest checkpoint;
-- data-parallel experience collection: episodes with different traces
-  are independent; with >1 device the replay batch shards over the
-  ``data`` axis (the policy is tiny and replicated — see DESIGN.md).
+  driver auto-resumes from the latest checkpoint.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.rl_train --workload light \
-      --episodes 150 --hidden 64 --outdir runs/light_med
+      --episodes 150 --hidden 64 --batch-episodes 8 --outdir runs/light_med
 """
 from __future__ import annotations
 
@@ -28,8 +41,8 @@ import numpy as np
 
 from repro.ckpt import CheckpointManager
 from repro.core import policy as P, ddpg as D
-from repro.core.replay import ReplayBuffer
-from repro.core.rollout import make_policy_period, run_episode, evaluate
+from repro.core.replay import DeviceReplay
+from repro.core.rollout import evaluate_batch, make_rollout_batch
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.env import EnvConfig, SchedulingEnv
 from repro.workloads import build_registry
@@ -41,6 +54,7 @@ class TrainConfig:
     qos_level: str = "medium"
     qos_factor: float = 3.0
     load: float = 0.9
+    scenario: str = "default"
     bandwidth_gbps: float = 16.0
     t_s_us: float = 500.0
     periods: int = 60
@@ -48,6 +62,7 @@ class TrainConfig:
     max_jobs: int = 64
     hidden: int = 64
     episodes: int = 150
+    batch_episodes: int = 8
     updates_per_episode: int = 30
     batch_size: int = 32
     replay_capacity: int = 4000
@@ -71,11 +86,21 @@ def build_env(cfg: TrainConfig) -> SchedulingEnv:
     arr = ArrivalConfig(max_jobs=cfg.max_jobs, load=cfg.load,
                         qos_factor=cfg.qos_factor, qos_level=cfg.qos_level,
                         horizon_us=ecfg.horizon_us,
-                        slack_us=2.0 * cfg.t_s_us)
+                        slack_us=2.0 * cfg.t_s_us,
+                        scenario=cfg.scenario)
     return SchedulingEnv(reg, ecfg, arr)
 
 
 def train(cfg: TrainConfig, log_fn=print) -> dict:
+    if cfg.batch_episodes < 1:
+        raise ValueError(f"--batch-episodes must be >= 1, "
+                         f"got {cfg.batch_episodes}")
+    if cfg.batch_episodes * cfg.periods > cfg.replay_capacity:
+        # one ring scatter cannot wrap the buffer more than once
+        raise ValueError(
+            f"a collection round writes batch_episodes * periods = "
+            f"{cfg.batch_episodes * cfg.periods} transitions, which must "
+            f"fit --replay-capacity ({cfg.replay_capacity})")
     env = build_env(cfg)
     pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
                           hidden=cfg.hidden)
@@ -89,9 +114,16 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         start_ep = meta.get("episode", 0) + 1
         log_fn(f"[resume] restored checkpoint at episode {start_ep - 1}")
 
-    buf = ReplayBuffer(cfg.replay_capacity, env.seq_len, env.feat_dim,
-                       env.act_dim, seed=cfg.seed)
-    period_fn = make_policy_period(env, pcfg)
+    buf = DeviceReplay(cfg.replay_capacity, env.seq_len, env.feat_dim,
+                       env.act_dim)
+    # episodes are independent -> shard the collection batch over all
+    # local devices when it divides evenly (pure vmap otherwise; the
+    # runner cache makes re-requesting either variant free)
+    devs = jax.local_devices()
+
+    def rollout_for(n: int):
+        use = devs if len(devs) > 1 and n % len(devs) == 0 else None
+        return make_rollout_batch(env, pcfg, devices=use)
     os.makedirs(cfg.outdir, exist_ok=True)
     logf = open(os.path.join(cfg.outdir, "log.jsonl"), "a")
     rng = np.random.default_rng(cfg.seed + 1000 * start_ep)
@@ -99,32 +131,38 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
     history = []
     sigma = max(cfg.sigma_min, cfg.sigma0 * cfg.sigma_decay ** start_ep)
 
-    for ep in range(start_ep, cfg.episodes):
-        if ep == cfg.fail_at:
-            raise RuntimeError(f"injected failure at episode {ep}")
+    start = start_ep
+    while start < cfg.episodes:
+        n = min(cfg.batch_episodes, cfg.episodes - start)
+        ep = start + n - 1                           # last episode of round
+        if start <= cfg.fail_at <= ep:
+            raise RuntimeError(f"injected failure at episode {cfg.fail_at}")
         t0 = time.time()
-        key, sub = jax.random.split(key)
-        m, trans = run_episode(env, period_fn, rng, params=state.actor,
-                               key=sub, sigma=sigma, collect=True)
-        for tr in trans:
-            buf.add(tr["s"], tr["mask"], tr["a"], tr["r"], tr["s2"],
-                    tr["mask2"])
-        infos = []
-        if ep >= cfg.warmup_episodes:
-            for _ in range(cfg.updates_per_episode):
-                batch = {k: jnp.asarray(v)
-                         for k, v in buf.sample(cfg.batch_size).items()}
-                state, info = D.ddpg_update_jit(state, dcfg, batch)
-            infos.append(jax.tree.map(float, info))
-        sigma = max(cfg.sigma_min, sigma * cfg.sigma_decay)
-        rec = dict(episode=ep, sla=m["sla_rate"], sigma=round(sigma, 4),
-                   reward_train=m.get("reward", 0.0),
+        key, kroll, kup = jax.random.split(key, 3)
+        traces, states = env.new_episodes(rng, n)
+        _, trans, _, mets = rollout_for(n)(state.actor, states, traces,
+                                           kroll, jnp.float32(sigma))
+        buf.add_batch(trans)
+        info = None
+        if ep + 1 > cfg.warmup_episodes:
+            state, infos = D.ddpg_update_scan(
+                state, dcfg, buf.data, kup,
+                num_updates=cfg.updates_per_episode * n,
+                batch_size=cfg.batch_size)
+            info = jax.tree.map(lambda x: float(x[-1]), infos)
+        sigma = max(cfg.sigma_min, sigma * cfg.sigma_decay ** n)
+        rec = dict(episode=ep, batch_episodes=n,
+                   sla=round(float(jnp.mean(mets["sla_rate"])), 4),
+                   sigma=round(sigma, 4),
+                   periods_per_sec=round(n * cfg.periods
+                                         / max(time.time() - t0, 1e-9), 1),
                    secs=round(time.time() - t0, 2))
-        if infos:
-            rec.update({k: round(v, 5) for k, v in infos[-1].items()})
-        if (ep + 1) % cfg.eval_every == 0 or ep == cfg.episodes - 1:
-            ev = evaluate(env, period_fn, seeds=range(7000, 7000 + cfg.eval_seeds),
-                          params=state.actor, key=key)
+        if info:
+            rec.update({k: round(v, 5) for k, v in info.items()})
+        crossed = ((ep + 1) // cfg.eval_every > start // cfg.eval_every)
+        if crossed or ep == cfg.episodes - 1:
+            ev = evaluate_batch(env, pcfg, state.actor,
+                                seeds=range(7000, 7000 + cfg.eval_seeds))
             rec["eval_sla"] = round(ev["sla_rate"], 4)
             if ev["sla_rate"] > best["sla_rate"]:
                 best = {**ev, "episode": ep}
@@ -135,13 +173,14 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                                    hidden=cfg.hidden,
                                    feat_dim=env.feat_dim,
                                    act_dim=env.act_dim))
-        if (ep + 1) % cfg.ckpt_every == 0:
+        if (ep + 1) // cfg.ckpt_every > start // cfg.ckpt_every:
             mgr.save(ep, state, dict(episode=ep))
         logf.write(json.dumps(rec) + "\n")
         logf.flush()
-        log_fn(f"[ep {ep:4d}] sla={m['sla_rate']:.3f} sigma={sigma:.3f} "
+        log_fn(f"[ep {ep:4d}] sla={rec['sla']:.3f} sigma={sigma:.3f} "
                + (f"eval={rec.get('eval_sla')}" if "eval_sla" in rec else ""))
         history.append(rec)
+        start += n
     logf.close()
     return dict(best=best, history=history, env=env, pcfg=pcfg, state=state)
 

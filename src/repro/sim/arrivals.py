@@ -5,6 +5,26 @@ task dispatching in data centers", Da Costa et al.), models uniformly
 from the workload set, and each request's SLA latency budget is
 ``qos_factor * min_isolated_latency`` (the PREMA approach), with
 QoS-High = 0.8x and QoS-Low = 1.2x the Medium factor.
+
+Scenario presets (selectable from configs / CLI via ``scenario=``):
+
+- ``default``     the paper's Pareto(2.0) process (legacy behaviour);
+- ``steady``      near-deterministic arrivals (jittered uniform spacing)
+                  — the low-variance sanity regime;
+- ``burst``       arrivals grouped into tight bursts separated by long
+                  idle gaps (same mean rate) — stresses queue depth;
+- ``diurnal``     sinusoidally rate-modulated Poisson process over the
+                  horizon (rate in [0.5, 1.5]x base, peak = 3x trough)
+                  — the day/night pattern of real inference traffic;
+- ``heavy_tail``  Pareto(1.2) with a looser tail clip — extreme
+                  dispatch-center burstiness.
+
+All presets conserve the configured mean arrival rate (``load`` knob),
+so SLA numbers stay comparable across scenarios.
+
+:func:`generate_traces` is the batched twin of :func:`generate_trace`:
+it returns the same dict with a leading ``(batch,)`` axis on every
+array, ready to be moved to device and ``vmap``-ed over.
 """
 from __future__ import annotations
 
@@ -13,6 +33,8 @@ import dataclasses
 import numpy as np
 
 QOS_MULT = {"high": 0.8, "medium": 1.0, "low": 1.2}
+
+SCENARIOS = ("default", "steady", "burst", "diurnal", "heavy_tail")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +51,57 @@ class ArrivalConfig:
     # budget must exceed the period (see DESIGN.md "Assumptions changed");
     # set to 2 * T_S by the environment.
     slack_us: float = 0.0
+    # named arrival-process preset (see module docstring / SCENARIOS)
+    scenario: str = "default"
+    burst_size: int = 4            # jobs per burst (scenario="burst")
+
+
+def scenario_preset(name: str, **overrides) -> "ArrivalConfig":
+    """Build an ArrivalConfig for a named scenario (plus overrides)."""
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; pick one of {SCENARIOS}")
+    return ArrivalConfig(scenario=name, **overrides)
+
+
+def _interarrivals(cfg: ArrivalConfig, mean_ia: float, J: int,
+                   rng: np.random.Generator) -> np.ndarray:
+    """Draw J inter-arrival times with the configured mean, per scenario."""
+    sc = cfg.scenario
+    if sc in ("default", "heavy_tail"):
+        a = cfg.pareto_shape if sc == "default" else 1.2
+        clip = 50.0 if sc == "default" else 200.0
+        xm = mean_ia * (a - 1.0) / a              # Pareto scale for mean_ia
+        inter = xm * (1.0 + rng.pareto(a, size=J))
+        return np.minimum(inter, clip * mean_ia)
+    if sc == "steady":
+        return mean_ia * rng.uniform(0.8, 1.2, size=J)
+    if sc == "burst":
+        # bursts of `burst_size` back-to-back jobs; the inter-burst gap
+        # absorbs the rest of the budget so the mean rate is conserved
+        bs = max(1, cfg.burst_size)
+        intra = 0.1 * mean_ia
+        gap = bs * mean_ia - (bs - 1) * intra
+        inter = np.full(J, intra)
+        inter[::bs] = gap * rng.uniform(0.5, 1.5, size=len(inter[::bs]))
+        return inter
+    if sc == "diurnal":
+        # inhomogeneous Poisson, rate(t) = base * (1 + 0.5 sin(2*pi*t/H)):
+        # sequential thinning against the peak rate (1.5x base)
+        base = 1.0 / mean_ia
+        peak = 1.5 * base
+        H = max(cfg.horizon_us, mean_ia)
+        inter = np.empty(J)
+        t = prev = 0.0
+        for i in range(J):
+            while True:
+                t += rng.exponential(1.0 / peak)
+                rate = base * (1.0 + 0.5 * np.sin(2.0 * np.pi * t / H))
+                if rng.uniform() <= rate / peak:
+                    break
+            inter[i] = t - prev
+            prev = t
+        return inter
+    raise ValueError(f"unknown scenario {sc!r}; pick one of {SCENARIOS}")
 
 
 def generate_trace(min_lat_us: np.ndarray, cfg: ArrivalConfig,
@@ -42,11 +115,8 @@ def generate_trace(min_lat_us: np.ndarray, cfg: ArrivalConfig,
     mean_lat = float(np.mean(min_lat_us))
     lam = cfg.load * cfg.eff_parallelism / mean_lat  # arrivals per us
     mean_ia = 1.0 / lam
-    a = cfg.pareto_shape
-    xm = mean_ia * (a - 1.0) / a                      # Pareto scale for mean_ia
     J = cfg.max_jobs
-    inter = xm * (1.0 + rng.pareto(a, size=J))
-    inter = np.minimum(inter, 50.0 * mean_ia)         # clip the extreme tail
+    inter = _interarrivals(cfg, mean_ia, J, rng)
     arrival = np.cumsum(inter)
     arrival[0] = 0.0                                  # first job at t=0
     model = rng.integers(0, n_models, size=J)
@@ -61,3 +131,15 @@ def generate_trace(min_lat_us: np.ndarray, cfg: ArrivalConfig,
                 model=model.astype(np.int32),
                 deadline=deadline.astype(np.float32),
                 q=q.astype(np.float32))
+
+
+def generate_traces(min_lat_us: np.ndarray, cfg: ArrivalConfig,
+                    rng: np.random.Generator,
+                    batch: int) -> dict[str, np.ndarray]:
+    """Batched :func:`generate_trace`: every array gains a (batch,) axis.
+
+    Episodes are independent draws of the same arrival process; the
+    result stacks directly into device arrays for ``vmap``-ed rollouts.
+    """
+    traces = [generate_trace(min_lat_us, cfg, rng) for _ in range(batch)]
+    return {k: np.stack([t[k] for t in traces]) for k in traces[0]}

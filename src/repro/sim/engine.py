@@ -11,11 +11,17 @@ Semantics (paper Sec. 3):
   cycles*, exactly the contention model of the paper.
 - Time advances event-by-event (finish events + enabling times).
 
-Two implementations with identical semantics:
+Three implementations with identical semantics:
 - ``simulate_np``  — float64 NumPy oracle (tests, MAGMA fitness).
 - ``simulate_jax`` — fixed-shape ``lax.while_loop`` version used inside
   the jitted environment/rollout (float32; times are period-relative so
-  magnitudes stay small).
+  magnitudes stay small).  Per-SA reductions are one-hot masked
+  max/min instead of ``jax.ops.segment_*``: XLA CPU lowers segment
+  scatters to serial per-element loops, which destroys the ``vmap``
+  vectorization the batched rollout pipeline depends on.
+- ``simulate_jax_segments`` — the seed's segment-op formulation, kept
+  as the "before" arm of ``benchmarks/rollout_throughput.py`` and as a
+  third engine for parity cross-checks.
 
 Times are in microseconds, bandwidths in GB/s.
 """
@@ -152,26 +158,31 @@ def simulate_jax(valid, assign, prio, cost, bw, dep, ready, sa_free, B,
     ready = ready.astype(jnp.float32)
     sa_free = sa_free.astype(jnp.float32)
     idx = jnp.arange(n)
-
-    def dep_ok(finished):
-        return jnp.where(dep < 0, True, finished[jnp.clip(dep, 0)])
+    # (n, M) SA one-hot, loop-invariant: per-SA reductions below are
+    # masked max/min over this instead of segment_* — XLA CPU lowers
+    # segment scatters to serial per-element loops, which destroys the
+    # vmap vectorization the batched rollout pipeline relies on.
+    onehot = assign[:, None] == jnp.arange(M)[None, :]
+    # loop-invariant hoists: tie-broken scores, per-slot SA-free times
+    prio_tb = prio - idx.astype(jnp.float32) * 1e-6
+    enab_static = jnp.maximum(sa_free[assign], ready)
 
     def body(state):
         it, t, started, finished, progress, start, finish = state
         active = started & ~finished & valid
+        dep_done = jnp.where(dep < 0, True, finished[jnp.clip(dep, 0)])
         # ---- start phase: per-SA best ready candidate on idle SAs
-        sa_busy = jax.ops.segment_max(active.astype(jnp.int32), assign,
-                                      num_segments=M) > 0
+        sa_busy = jnp.any(active[:, None] & onehot, axis=0)
         sa_open = ~sa_busy & (sa_free <= t + _EPS)
-        cand = (valid & ~started & dep_ok(finished) & (ready <= t + _EPS)
+        cand = (valid & ~started & dep_done & (ready <= t + _EPS)
                 & sa_open[assign])
         # score: priority, tie-broken by lower slot index
-        score = jnp.where(cand, prio - idx.astype(jnp.float32) * 1e-6, -INF)
-        best = jax.ops.segment_max(score, assign, num_segments=M)
+        score = jnp.where(cand, prio_tb, -INF)
+        best = jnp.max(jnp.where(onehot, score[:, None], -INF), axis=0)
         starts_now = cand & (score >= best[assign] - 1e-9) & (score > -INF / 2)
         # guard against float ties admitting 2 SJs on one SA: keep lowest idx
-        first_idx = jax.ops.segment_min(jnp.where(starts_now, idx, n), assign,
-                                        num_segments=M)
+        first_idx = jnp.min(
+            jnp.where(starts_now[:, None] & onehot, idx[:, None], n), axis=0)
         starts_now = starts_now & (idx == first_idx[assign])
         started = started | starts_now
         start = jnp.where(starts_now, t, start)
@@ -187,12 +198,86 @@ def simulate_jax(valid, assign, prio, cost, bw, dep, ready, sa_free, B,
                         jnp.maximum(cost - progress, 0.0)
                         / jnp.maximum(rho, 1e-12), INF)
         t_fin = t + jnp.maximum(jnp.min(rem), tol)   # force representable step
+        pend = valid & ~started & dep_done
+        enab = jnp.where(pend & (enab_static > t + _EPS), enab_static, INF)
+        next_t = jnp.minimum(t_fin, jnp.min(enab))
+        next_t = jnp.where(jnp.isfinite(next_t) & (next_t < INF / 2), next_t, t)
+        # ---- progress update
+        dt = next_t - t
+        progress = jnp.where(active, progress + dt * rho, progress)
+        done = active & (progress >= cost - tol)
+        finish = jnp.where(done, next_t, finish)
+        finished = finished | done
+        return it + 1, next_t, started, finished, progress, start, finish
+
+    def cond(state):
+        it, _, _, finished, *_ = state
+        return (it < max_iters) & jnp.any(valid & ~finished)
+
+    init = (jnp.array(0), jnp.array(0.0, jnp.float32),
+            jnp.zeros(n, bool), jnp.zeros(n, bool), jnp.zeros(n, jnp.float32),
+            jnp.full(n, INF, jnp.float32), jnp.full(n, INF, jnp.float32))
+    *_, start, finish = jax.lax.while_loop(cond, body, init)
+    return start, finish
+
+
+@functools.partial(jax.jit, static_argnames=("num_sas", "max_iters"))
+def simulate_jax_segments(valid, assign, prio, cost, bw, dep, ready, sa_free,
+                          B, *, num_sas: int, max_iters: int | None = None):
+    """Seed implementation of :func:`simulate_jax` (jax.ops.segment_*).
+
+    Kept verbatim as (a) the "before" arm of
+    ``benchmarks/rollout_throughput.py`` — XLA CPU lowers the segment
+    scatters to serial per-element loops, which is exactly the
+    behaviour the one-hot rewrite above removes — and (b) a third
+    engine implementation for parity cross-checks in tests.
+    """
+    n = valid.shape[0]
+    M = num_sas
+    if max_iters is None:
+        max_iters = 3 * n + M + 16
+    valid = valid.astype(bool)
+    assign = assign.astype(jnp.int32)
+    prio = prio.astype(jnp.float32)
+    cost = cost.astype(jnp.float32)
+    bw = bw.astype(jnp.float32)
+    dep = dep.astype(jnp.int32)
+    ready = ready.astype(jnp.float32)
+    sa_free = sa_free.astype(jnp.float32)
+    idx = jnp.arange(n)
+
+    def dep_ok(finished):
+        return jnp.where(dep < 0, True, finished[jnp.clip(dep, 0)])
+
+    def body(state):
+        it, t, started, finished, progress, start, finish = state
+        active = started & ~finished & valid
+        sa_busy = jax.ops.segment_max(active.astype(jnp.int32), assign,
+                                      num_segments=M) > 0
+        sa_open = ~sa_busy & (sa_free <= t + _EPS)
+        cand = (valid & ~started & dep_ok(finished) & (ready <= t + _EPS)
+                & sa_open[assign])
+        score = jnp.where(cand, prio - idx.astype(jnp.float32) * 1e-6, -INF)
+        best = jax.ops.segment_max(score, assign, num_segments=M)
+        starts_now = cand & (score >= best[assign] - 1e-9) & (score > -INF / 2)
+        first_idx = jax.ops.segment_min(jnp.where(starts_now, idx, n), assign,
+                                        num_segments=M)
+        starts_now = starts_now & (idx == first_idx[assign])
+        started = started | starts_now
+        start = jnp.where(starts_now, t, start)
+        active = active | starts_now
+        tol = _EPS + 4e-6 * t
+        D = jnp.sum(jnp.where(active, bw, 0.0))
+        rho = jnp.where(D > B, B / jnp.maximum(D, 1e-9), 1.0)
+        rem = jnp.where(active,
+                        jnp.maximum(cost - progress, 0.0)
+                        / jnp.maximum(rho, 1e-12), INF)
+        t_fin = t + jnp.maximum(jnp.min(rem), tol)
         pend = valid & ~started & dep_ok(finished)
         enab = jnp.where(pend, jnp.maximum(sa_free[assign], ready), INF)
         enab = jnp.where(enab > t + _EPS, enab, INF)
         next_t = jnp.minimum(t_fin, jnp.min(enab))
         next_t = jnp.where(jnp.isfinite(next_t) & (next_t < INF / 2), next_t, t)
-        # ---- progress update
         dt = next_t - t
         progress = jnp.where(active, progress + dt * rho, progress)
         done = active & (progress >= cost - tol)

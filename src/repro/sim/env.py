@@ -17,6 +17,12 @@ Each period:
      ``t + T_s`` commit (non-preemptive), the rest become residuals;
   5. the paper reward is computed from the projected finish times;
   6. the transition's next state encodes the residual RQ only.
+
+Whole episodes are traceable too: :meth:`SchedulingEnv.episode` runs
+all periods in one ``jax.lax.scan`` (final drop pass + metrics inside
+the trace) and is ``vmap``-able over the stacked traces/states built by
+:meth:`SchedulingEnv.new_episodes` — the device-resident batched
+rollout pipeline in ``repro.core.rollout`` is built on exactly this.
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.costmodel.registry import Registry
-from repro.sim.arrivals import ArrivalConfig, generate_trace
+from repro.sim.arrivals import ArrivalConfig, generate_trace, generate_traces
 from repro.sim.engine import simulate_jax, INF
 
 State = dict[str, Any]
@@ -80,12 +86,10 @@ class SchedulingEnv:
         self.seq_len = cfg.max_rq + 1          # + primer
 
     # ---------------- episode setup ----------------
-    def new_episode(self, rng: np.random.Generator) -> tuple[Trace, State]:
-        tr = generate_trace(np.asarray(self.min_lat), self.arrivals, rng)
-        trace = {k: jnp.asarray(v) for k, v in tr.items()}
-        trace["njl"] = self.n_layers[trace["model"]]
+    def init_state(self, trace: Trace) -> State:
+        """Fresh per-episode state for one trace (traceable, vmap-able)."""
         J, M = self.cfg.max_jobs, self.num_sas
-        state: State = dict(
+        return dict(
             nls=jnp.zeros((J,), jnp.int32),
             jready=trace["arrival"],
             missed=jnp.zeros((J,), bool),
@@ -96,7 +100,24 @@ class SchedulingEnv:
             t=jnp.zeros((), jnp.float32),
             energy=jnp.zeros((), jnp.float32),
         )
-        return trace, state
+
+    def _finish_trace(self, tr: dict) -> Trace:
+        trace = {k: jnp.asarray(v) for k, v in tr.items()}
+        trace["njl"] = self.n_layers[trace["model"]]
+        return trace
+
+    def new_episode(self, rng: np.random.Generator) -> tuple[Trace, State]:
+        trace = self._finish_trace(
+            generate_trace(np.asarray(self.min_lat), self.arrivals, rng))
+        return trace, self.init_state(trace)
+
+    def new_episodes(self, rng: np.random.Generator,
+                     batch: int) -> tuple[Trace, State]:
+        """Batched :meth:`new_episode`: all arrays gain a (batch,) axis."""
+        traces = self._finish_trace(
+            generate_traces(np.asarray(self.min_lat), self.arrivals, rng,
+                            batch))
+        return traces, jax.vmap(self.init_state)(traces)
 
     # ---------------- pure helpers (traceable) ----------------
     def mark_drops(self, state: State, trace: Trace, now) -> State:
@@ -167,7 +188,10 @@ class SchedulingEnv:
     def simulate(self, state: State, slots: Slots, prio, sa_choice):
         """Engine run for the current RQ. Returns (start, finish) rel. to t."""
         sa = jnp.clip(sa_choice.astype(jnp.int32), 0, self.num_sas - 1)
-        take = lambda x: jnp.take_along_axis(x, sa[:, None], axis=1)[:, 0]
+        # one-hot contraction instead of take_along_axis: batched gathers
+        # serialize on XLA CPU (see sim/engine.py), (R, M) selects don't
+        sahot = sa[:, None] == jnp.arange(self.num_sas)[None, :]
+        take = lambda x: jnp.sum(jnp.where(sahot, x, 0.0), axis=1)
         cost = take(slots["cost_all"])
         bw = take(slots["bw_all"])
         sa_free_rel = jnp.maximum(0.0, state["sa_free"] - state["t"])
@@ -201,10 +225,14 @@ class SchedulingEnv:
         committed = (slots["valid"] & (start < cfg.t_s_us - 1e-6)
                      & (fin < INF / 2))
         job = slots["job"]
-        ncom = jax.ops.segment_sum(committed.astype(jnp.int32), job,
-                                   num_segments=J)
+        # per-job / per-SA reductions via one-hot masked max/sum instead
+        # of segment_* (XLA CPU scatters serialize under vmap — see
+        # sim/engine.py); R x J = 96 x 64 bools is tiny.
+        jobhot = job[:, None] == jnp.arange(J)[None, :]          # (R, J)
+        ncom = jnp.sum(committed[:, None] & jobhot, axis=0,
+                       dtype=jnp.int32)
         fin_c = jnp.where(committed, fin, -INF)
-        jlast = jax.ops.segment_max(fin_c, job, num_segments=J)
+        jlast = jnp.max(jnp.where(jobhot, fin_c[:, None], -INF), axis=0)
         nls = state["nls"] + ncom
         jready = jnp.where(ncom > 0, t + jlast, state["jready"])
         arrived = trace["arrival"] <= t
@@ -214,7 +242,8 @@ class SchedulingEnv:
         hit = state["hit"] | (newly_done & (fjob <= trace["deadline"]))
         done = state["done"] | newly_done
         energy = state["energy"] + jnp.sum(jnp.where(committed, en, 0.0))
-        fin_sa = jax.ops.segment_max(fin_c, sa, num_segments=M)
+        sahot = sa[:, None] == jnp.arange(M)[None, :]            # (R, M)
+        fin_sa = jnp.max(jnp.where(sahot, fin_c[:, None], -INF), axis=0)
         sa_free = jnp.where(fin_sa > -INF / 2,
                             jnp.maximum(state["sa_free"], t + fin_sa),
                             state["sa_free"])
@@ -245,6 +274,35 @@ class SchedulingEnv:
         info = dict(reward=r,
                     committed=jnp.sum(slots["valid"] & (start < self.cfg.t_s_us)))
         return new_state, trans, info
+
+    # ---------------- whole episode (traceable, vmap-able) ----------------
+    def episode(self, state: State, trace: Trace, act_fn, keys,
+                collect: bool = True):
+        """Run all ``cfg.periods`` periods inside one ``jax.lax.scan``.
+
+        act_fn(feats, mask, slots, state, aux) -> (a, prio, sa); ``aux``
+        is that period's slice of ``keys``, an arbitrary per-period scan
+        input with leading dim ``periods`` (pre-drawn exploration noise,
+        PRNG keys, or dummy zeros for deterministic policies).
+
+        Entirely traceable: jit it once and ``vmap`` over stacked
+        (state, trace, keys) for device-resident batched rollouts.  The
+        final drop pass and episode metrics run inside the trace.
+
+        Returns (final_state, transitions, infos, metrics) where
+        transitions/infos are stacked over the leading periods axis
+        (transitions is ``{}`` when ``collect=False``).
+        """
+        def step(st, key):
+            new_st, trans, info = self.period(
+                st, trace,
+                lambda feats, mask, slots, s: act_fn(feats, mask, slots,
+                                                     s, key))
+            return new_st, ((trans if collect else {}), info)
+
+        final, (transitions, infos) = jax.lax.scan(step, state, keys)
+        final = self.mark_drops(final, trace, final["t"])
+        return final, transitions, infos, self.metrics(final, trace)
 
     # ---------------- episode metrics ----------------
     def metrics(self, state: State, trace: Trace) -> dict[str, jnp.ndarray]:

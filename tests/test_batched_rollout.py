@@ -1,0 +1,227 @@
+"""Batched device-resident pipeline tests: rollout parity, on-device
+replay semantics, fused DDPG updates, and arrival-scenario presets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import ddpg as D
+from repro.core import policy as P
+from repro.core.replay import DeviceReplay, replay_add_batch, replay_init
+from repro.core.rollout import (evaluate, evaluate_batch,
+                                evaluate_batch_baseline,
+                                make_baseline_period, make_policy_period,
+                                make_rollout_batch, run_episode,
+                                stack_episodes)
+from repro.sim.arrivals import SCENARIOS, ArrivalConfig, generate_trace, \
+    generate_traces, scenario_preset
+from repro.sim.env import EnvConfig, SchedulingEnv
+from repro.workloads import build_registry
+
+ECFG = EnvConfig(t_s_us=500.0, periods=6, max_rq=16, max_jobs=8)
+SEEDS = (3, 4)
+
+
+@pytest.fixture(scope="module")
+def env():
+    reg = build_registry("light")
+    arr = ArrivalConfig(max_jobs=ECFG.max_jobs, horizon_us=ECFG.horizon_us,
+                        slack_us=2 * ECFG.t_s_us)
+    return SchedulingEnv(reg, ECFG, arr)
+
+
+@pytest.fixture(scope="module")
+def pcfg(env):
+    return P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
+                          hidden=8)
+
+
+@pytest.fixture(scope="module")
+def params(pcfg):
+    return P.init_actor(jax.random.PRNGKey(0), pcfg)
+
+
+# ---------------------------------------------------------------------------
+# rollout parity: jitted scan/vmap pipeline vs legacy per-period loop
+# ---------------------------------------------------------------------------
+def test_rollout_batch_transitions_match_legacy_loop(env, pcfg, params):
+    """Identical traces + deterministic policy -> identical transitions."""
+    rollout = make_rollout_batch(env, pcfg)
+    traces, states = stack_episodes(env, SEEDS)
+    _, trans, _, mets = rollout(params, states, traces,
+                                jax.random.PRNGKey(0), 0.0)
+
+    period_fn = make_policy_period(env, pcfg)
+    for i, s in enumerate(SEEDS):
+        m, legacy = run_episode(env, period_fn, np.random.default_rng(s),
+                                params=params, key=jax.random.PRNGKey(s),
+                                sigma=0.0, collect=True)
+        for k in ("s", "mask", "a", "s2", "mask2"):
+            want = np.stack([t[k] for t in legacy])
+            got = np.asarray(trans[k][i])
+            assert np.allclose(got, want, atol=1e-4), (k, i)
+        r_want = np.array([t["r"] for t in legacy])
+        assert np.allclose(np.asarray(trans["r"][i]), r_want, atol=1e-3)
+        for k, v in m.items():
+            assert np.isclose(float(mets[k][i]), v, atol=1e-4), (k, i)
+
+
+def test_evaluate_batch_matches_legacy_evaluate(env, pcfg, params):
+    batched = evaluate_batch(env, pcfg, params, SEEDS)
+    legacy = evaluate(env, make_policy_period(env, pcfg), SEEDS,
+                      params=params, key=jax.random.PRNGKey(0))
+    for k, v in legacy.items():
+        assert np.isclose(batched[k], v, atol=1e-4), k
+
+
+def test_baseline_batch_matches_legacy_loop(env):
+    batched = evaluate_batch_baseline(env, BL.BASELINES["fcfs"], SEEDS)
+    period = make_baseline_period(env, BL.BASELINES["fcfs"])
+    out = {}
+    for s in SEEDS:
+        m, _ = run_episode(env, period, np.random.default_rng(s))
+        for k, v in m.items():
+            out.setdefault(k, []).append(v)
+    for k, v in out.items():
+        assert np.isclose(batched[k], float(np.mean(v)), atol=1e-4), k
+
+
+# ---------------------------------------------------------------------------
+# device replay buffer
+# ---------------------------------------------------------------------------
+def _fake_batch(n, T, F, G, base=0.0):
+    return dict(s=jnp.ones((n, T, F)) * base, mask=jnp.ones((n, T), bool),
+                a=jnp.zeros((n, T - 1, G)),
+                r=jnp.arange(n, dtype=jnp.float32) + base,
+                s2=jnp.zeros((n, T, F)), mask2=jnp.ones((n, T), bool))
+
+
+def test_device_replay_ring_semantics():
+    T, F, G = 4, 3, 2
+    buf = DeviceReplay(capacity=16, seq_len=T, feat_dim=F, act_dim=G)
+    buf.add_batch(_fake_batch(10, T, F, G, base=0.0))    # r in [0, 10)
+    assert len(buf) == 10 and int(buf.data["ptr"]) == 10
+    buf.add_batch(_fake_batch(10, T, F, G, base=100.0))  # r in [100, 110)
+    assert len(buf) == 16 and int(buf.data["ptr"]) == 4
+    r = np.asarray(buf.data["r"])
+    # slots 0..3 and 10..15 wrapped to the new batch, 4..9 kept
+    assert (r[np.r_[0:4, 10:16]] >= 100).all()
+    assert (r[4:10] < 10).all() and (r[4:10] >= 4).all()
+
+    s = buf.sample(jax.random.PRNGKey(1), 32)
+    assert s["s"].shape == (32, T, F) and s["r"].shape == (32,)
+    s2 = buf.sample(jax.random.PRNGKey(1), 32)
+    assert np.array_equal(np.asarray(s["r"]), np.asarray(s2["r"]))
+
+
+def test_device_replay_sample_only_filled():
+    T, F, G = 3, 2, 1
+    buf = replay_init(64, T, F, G)
+    buf = replay_add_batch(buf, _fake_batch(5, T, F, G, base=50.0))
+    from repro.core.replay import replay_sample
+    s = replay_sample(buf, jax.random.PRNGKey(0), 64)
+    assert (np.asarray(s["r"]) >= 50).all()              # never pads
+
+
+def test_device_replay_flattens_episode_axes():
+    T, F, G = 4, 3, 2
+    buf = DeviceReplay(capacity=64, seq_len=T, feat_dim=F, act_dim=G)
+    batch = dict(s=jnp.zeros((2, 5, T, F)), mask=jnp.ones((2, 5, T), bool),
+                 a=jnp.zeros((2, 5, T - 1, G)), r=jnp.zeros((2, 5)),
+                 s2=jnp.zeros((2, 5, T, F)), mask2=jnp.ones((2, 5, T), bool))
+    buf.add_batch(batch)                                 # (B, P, ...) input
+    assert len(buf) == 10
+
+
+# ---------------------------------------------------------------------------
+# fused DDPG update scan
+# ---------------------------------------------------------------------------
+def test_ddpg_update_scan_runs_and_steps(env, pcfg, params):
+    dcfg = D.DDPGConfig(policy=pcfg)
+    st = D.init_ddpg(jax.random.PRNGKey(1), dcfg)
+    rollout = make_rollout_batch(env, pcfg)
+    traces, states = stack_episodes(env, SEEDS)
+    _, trans, _, _ = rollout(st.actor, states, traces,
+                             jax.random.PRNGKey(2), 0.3)
+    buf = DeviceReplay(128, env.seq_len, env.feat_dim, env.act_dim)
+    buf.add_batch(trans)
+
+    st2, infos = D.ddpg_update_scan(st, dcfg, buf.data,
+                                    jax.random.PRNGKey(3),
+                                    num_updates=4, batch_size=8)
+    assert int(st2.step) == 4
+    assert infos["critic_loss"].shape == (4,)
+    assert np.isfinite(np.asarray(infos["critic_loss"])).all()
+    # parameters actually moved
+    delta = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         st.actor, st2.actor)
+    assert max(jax.tree.leaves(delta)) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# scenario presets
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_scenario_traces_are_valid(env, scenario):
+    cfg = scenario_preset(scenario, max_jobs=16,
+                          horizon_us=ECFG.horizon_us,
+                          slack_us=2 * ECFG.t_s_us)
+    tr = generate_trace(np.asarray(env.min_lat), cfg,
+                        np.random.default_rng(0))
+    live = tr["arrival"] < 1e29
+    a = tr["arrival"][live]
+    assert live.sum() > 0
+    assert a[0] == 0.0 and (np.diff(a) >= 0).all()
+    assert (tr["q"][live] > 0).all()
+    assert (tr["deadline"][live] >= tr["arrival"][live]).all()
+
+
+def test_generate_traces_batched_shapes(env):
+    cfg = env.arrivals
+    trs = generate_traces(np.asarray(env.min_lat), cfg,
+                          np.random.default_rng(1), batch=3)
+    for k in ("arrival", "model", "deadline", "q"):
+        assert trs[k].shape == (3, cfg.max_jobs)
+    # independent draws
+    assert not np.array_equal(trs["arrival"][0], trs["arrival"][1])
+
+
+def test_unknown_scenario_rejected():
+    with pytest.raises(ValueError):
+        scenario_preset("nope")
+    with pytest.raises(ValueError):
+        generate_trace(np.ones(3), ArrivalConfig(scenario="bogus"),
+                       np.random.default_rng(0))
+
+
+def test_new_episodes_batched_matches_single(env):
+    traces, states = env.new_episodes(np.random.default_rng(5), 3)
+    assert traces["arrival"].shape == (3, ECFG.max_jobs)
+    assert states["nls"].shape == (3, ECFG.max_jobs)
+    assert states["t"].shape == (3,)
+    assert np.array_equal(np.asarray(states["jready"]),
+                          np.asarray(traces["arrival"]))
+
+
+# ---------------------------------------------------------------------------
+# engine implementations agree
+# ---------------------------------------------------------------------------
+def test_engine_onehot_matches_segments():
+    from repro.sim.engine import simulate_jax, simulate_jax_segments
+    rng = np.random.default_rng(2)
+    n, M = 24, 4
+    dep = np.arange(n) - 1
+    dep[::6] = -1
+    args = (jnp.asarray(rng.random(n) < 0.9),
+            jnp.asarray(rng.integers(0, M, n), jnp.int32),
+            jnp.asarray(rng.uniform(size=n), jnp.float32),
+            jnp.asarray(rng.uniform(50, 500, n), jnp.float32),
+            jnp.asarray(rng.uniform(1, 8, n), jnp.float32),
+            jnp.asarray(dep, jnp.int32),
+            jnp.zeros(n, jnp.float32), jnp.zeros(M, jnp.float32),
+            jnp.float32(16.0))
+    s_a, f_a = simulate_jax(*args, num_sas=M)
+    s_b, f_b = simulate_jax_segments(*args, num_sas=M)
+    assert np.allclose(np.asarray(s_a), np.asarray(s_b), rtol=1e-5)
+    assert np.allclose(np.asarray(f_a), np.asarray(f_b), rtol=1e-5)

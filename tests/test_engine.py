@@ -1,7 +1,12 @@
 """Contention-engine tests: NumPy oracle vs JAX twin + invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # property tests skip; deterministic ones run
+    HAS_HYPOTHESIS = False
 
 from repro.sim.engine import simulate_np, simulate_jax, INF
 
@@ -84,67 +89,71 @@ def test_ready_skip_does_not_deadlock():
         ready=[10.0, 0.0], sa_free=[0.0], B=16.0, M=1)
     assert s[1] == 0.0 and s[0] == pytest.approx(10.0)
 
-
-@st.composite
-def scenario(draw):
-    n = draw(st.integers(2, 12))
-    M = draw(st.integers(1, 4))
-    n_jobs = draw(st.integers(1, 4))
-    job_of = [draw(st.integers(0, n_jobs - 1)) for _ in range(n)]
-    job_of.sort()  # contiguous layers per job, like the env packing
-    dep = [-1] * n
-    for i in range(1, n):
-        if job_of[i] == job_of[i - 1]:
-            dep[i] = i - 1
-    fl = st.floats(0.5, 20.0, allow_nan=False, width=32)
-    return dict(
-        valid=[True] * n,
-        assign=[draw(st.integers(0, M - 1)) for _ in range(n)],
-        prio=[draw(st.floats(-1, 1, allow_nan=False, width=32))
-              for _ in range(n)],
-        cost=[draw(fl) for _ in range(n)],
-        bw=[draw(st.floats(0.5, 16.0, allow_nan=False, width=32))
-            for _ in range(n)],
-        dep=dep,
-        ready=[0.0 if dep[i] >= 0 else draw(st.floats(0, 10, width=32))
-               for i in range(n)],
-        sa_free=[draw(st.floats(0, 5, width=32)) for _ in range(M)],
-        B=draw(st.floats(4.0, 16.0, width=32)), M=M)
-
-
-@given(scenario())
-@settings(max_examples=60, deadline=None)
-def test_property_jax_matches_oracle(sc):
-    M = sc.pop("M")
-    (s, f), (sj, fj) = run_both(**sc, M=M)
-    n = len(sc["valid"])
-    assert np.all(np.isfinite(f)), "oracle must finish every valid SJ"
-    assert np.all(fj < INF / 2), "jax engine must finish every valid SJ"
-    np.testing.assert_allclose(sj, s, rtol=1e-3, atol=1e-2)
-    np.testing.assert_allclose(fj, f, rtol=1e-3, atol=1e-2)
+if HAS_HYPOTHESIS:
+    @st.composite
+    def scenario(draw):
+        n = draw(st.integers(2, 12))
+        M = draw(st.integers(1, 4))
+        n_jobs = draw(st.integers(1, 4))
+        job_of = [draw(st.integers(0, n_jobs - 1)) for _ in range(n)]
+        job_of.sort()  # contiguous layers per job, like the env packing
+        dep = [-1] * n
+        for i in range(1, n):
+            if job_of[i] == job_of[i - 1]:
+                dep[i] = i - 1
+        fl = st.floats(0.5, 20.0, allow_nan=False, width=32)
+        return dict(
+            valid=[True] * n,
+            assign=[draw(st.integers(0, M - 1)) for _ in range(n)],
+            prio=[draw(st.floats(-1, 1, allow_nan=False, width=32))
+                  for _ in range(n)],
+            cost=[draw(fl) for _ in range(n)],
+            bw=[draw(st.floats(0.5, 16.0, allow_nan=False, width=32))
+                for _ in range(n)],
+            dep=dep,
+            ready=[0.0 if dep[i] >= 0 else draw(st.floats(0, 10, width=32))
+                   for i in range(n)],
+            sa_free=[draw(st.floats(0, 5, width=32)) for _ in range(M)],
+            B=draw(st.floats(4.0, 16.0, width=32)), M=M)
 
 
-@given(scenario())
-@settings(max_examples=40, deadline=None)
-def test_property_schedule_invariants(sc):
-    """No SA overlap; precedence respected; finish >= start + cost."""
-    M = sc.pop("M")
-    (s, f), _ = run_both(**sc, M=M)
-    n = len(sc["valid"])
-    cost = np.asarray(sc["cost"])
-    # duration can only stretch under contention, never shrink
-    assert np.all(f - s >= cost - 1e-6)
-    # SA exclusivity: intervals on the same SA don't overlap
-    for m in range(M):
-        idx = [i for i in range(n) if sc["assign"][i] == m]
-        iv = sorted((s[i], f[i]) for i in idx)
-        for (s1, f1), (s2, f2) in zip(iv, iv[1:]):
-            assert s2 >= f1 - 1e-6
-        for i in idx:  # respects initial busy period
-            assert s[i] >= sc["sa_free"][m] - 1e-6
-    # precedence
-    for i in range(n):
-        d = sc["dep"][i]
-        if d >= 0:
-            assert s[i] >= f[d] - 1e-6
-        assert s[i] >= sc["ready"][i] - 1e-6
+    @given(scenario())
+    @settings(max_examples=60, deadline=None)
+    def test_property_jax_matches_oracle(sc):
+        M = sc.pop("M")
+        (s, f), (sj, fj) = run_both(**sc, M=M)
+        n = len(sc["valid"])
+        assert np.all(np.isfinite(f)), "oracle must finish every valid SJ"
+        assert np.all(fj < INF / 2), "jax engine must finish every valid SJ"
+        np.testing.assert_allclose(sj, s, rtol=1e-3, atol=1e-2)
+        np.testing.assert_allclose(fj, f, rtol=1e-3, atol=1e-2)
+
+
+    @given(scenario())
+    @settings(max_examples=40, deadline=None)
+    def test_property_schedule_invariants(sc):
+        """No SA overlap; precedence respected; finish >= start + cost."""
+        M = sc.pop("M")
+        (s, f), _ = run_both(**sc, M=M)
+        n = len(sc["valid"])
+        cost = np.asarray(sc["cost"])
+        # duration can only stretch under contention, never shrink
+        assert np.all(f - s >= cost - 1e-6)
+        # SA exclusivity: intervals on the same SA don't overlap
+        for m in range(M):
+            idx = [i for i in range(n) if sc["assign"][i] == m]
+            iv = sorted((s[i], f[i]) for i in idx)
+            for (s1, f1), (s2, f2) in zip(iv, iv[1:]):
+                assert s2 >= f1 - 1e-6
+            for i in idx:  # respects initial busy period
+                assert s[i] >= sc["sa_free"][m] - 1e-6
+        # precedence
+        for i in range(n):
+            d = sc["dep"][i]
+            if d >= 0:
+                assert s[i] >= f[d] - 1e-6
+            assert s[i] >= sc["ready"][i] - 1e-6
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_engine():
+        pass

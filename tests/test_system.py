@@ -22,10 +22,11 @@ def test_rl_training_loop_runs_and_learns_signal(tmp_path):
     cfg = TrainConfig(workload="light", episodes=7, warmup_episodes=2,
                       updates_per_episode=4, hidden=16, max_rq=24,
                       max_jobs=10, periods=10, batch_size=8,
-                      eval_every=100, outdir=str(tmp_path))
+                      batch_episodes=4, eval_every=100, outdir=str(tmp_path))
     out = train(cfg, log_fn=lambda *_: None)
-    h = out["history"]
-    assert len(h) == 7
+    h = out["history"]                      # one record per collection round
+    assert sum(r["batch_episodes"] for r in h) == 7
+    assert h[-1]["episode"] == 6
     assert all(np.isfinite(r["sla"]) for r in h)
     assert any("critic_loss" in r for r in h)
     assert os.path.isdir(os.path.join(str(tmp_path), "ckpt"))
@@ -37,7 +38,7 @@ def test_rl_training_resumes_after_crash(tmp_path):
     args = ["--workload", "light", "--episodes", "6", "--hidden", "8",
             "--max-rq", "16", "--max-jobs", "8", "--periods", "6",
             "--warmup-episodes", "99", "--ckpt-every", "2",
-            "--eval-every", "100",
+            "--eval-every", "100", "--batch-episodes", "2",
             "--outdir", str(tmp_path / "run")]
     r1 = subprocess.run(
         [sys.executable, "-m", "repro.launch.rl_train", *args,
