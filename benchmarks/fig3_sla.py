@@ -17,9 +17,13 @@ POLICIES = ("fcfs", "prema", "herald", "magma", "relmas")
 
 def run(*, quick: bool = True, with_magma: bool = True,
         scenario: str = "default") -> dict:
-    """All non-MAGMA cells run through the batched device-resident
-    evaluator (benchmarks/common.eval_policy); ``scenario`` picks an
-    arrival-process preset (see repro.sim.arrivals.SCENARIOS)."""
+    """Every cell — including MAGMA, whose genetic search is scan-fused
+    into the episode (repro.core.baselines.magma_search_scan) — runs
+    through the batched device-resident evaluator
+    (benchmarks/common.eval_policy): one jitted call per cell.
+    ``scenario`` picks an arrival-process preset (see
+    repro.sim.arrivals.SCENARIOS); benchmarks/sweep.py crosses all
+    presets with all policies and bandwidths."""
     workloads = ("light", "heavy", "mixed")
     qos_levels = ("high", "medium", "low")
     seeds = range(7000, 7002 if quick else 7005)

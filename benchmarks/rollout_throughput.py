@@ -22,8 +22,20 @@ transitions (the training configuration).  Compile time is excluded via
 one untimed warmup call per arm.  Acceptance bar for the batched
 pipeline PR: >= 5x periods/sec at batch >= 8 on CPU.
 
+The ``magma_throughput`` section benchmarks the GA baseline the same
+way: the legacy host loop (one jitted dispatch per generation, one
+Python period step per period — how MAGMA was driven before the
+scan-fused port) vs ``magma_search_scan`` running inside the batched
+episode runner (whole episodes, all generations, one device call).
+``--population/--generations`` scale the GA (paper settings: 100x100).
+Acceptance bar for the scan-fused MAGMA PR: >= 5x periods/sec.
+
+Results are also written to ``BENCH_rollout.json`` (periods/sec and
+speedups per arm) so future PRs can track regressions.
+
 Usage:
-  PYTHONPATH=src python benchmarks/rollout_throughput.py --batch 32
+  PYTHONPATH=src python -m benchmarks.rollout_throughput --batch 32 \
+      --population 16 --generations 8
 """
 from __future__ import annotations
 
@@ -44,13 +56,16 @@ if "jax" not in sys.modules and os.environ.get("JAX_PLATFORMS", "") != "tpu":
             flags + f" --xla_force_host_platform_device_count={_cores}")
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import make_env
+from benchmarks.common import REPO, make_env
+from repro.core import baselines as BL
 from repro.core import policy as P
 from repro.core.replay import DeviceReplay, ReplayBuffer
-from repro.core.rollout import (make_policy_period, make_rollout_batch,
-                                run_episode)
+from repro.core.rollout import (make_baseline_episode_batch,
+                                make_policy_period, make_rollout_batch,
+                                run_episode, stack_episodes)
 from repro.sim import engine as engine_mod
 import repro.sim.env as env_mod
 
@@ -138,6 +153,59 @@ def run(*, batch: int = 32, legacy_episodes: int = 3, repeats: int = 3,
     return res
 
 
+def run_magma(*, batch: int = 8, legacy_episodes: int = 1, repeats: int = 2,
+              periods: int = 12, max_rq: int = 32, max_jobs: int = 12,
+              population: int = 16, generations: int = 8,
+              seed: int = 0) -> dict:
+    """Host-loop MAGMA vs scan-fused batched MAGMA, periods/sec.
+
+    The paper setting is ``--population 100 --generations 100``; the
+    defaults are a CI-sized scale-down of the same shape (the host-loop
+    arm pays ``periods x generations`` dispatches either way).
+    """
+    env = make_env("light", periods=periods, max_rq=max_rq,
+                   max_jobs=max_jobs)
+    mcfg = BL.MagmaConfig(population=population, generations=generations)
+
+    # ---- BEFORE: per-period Python loop, one jitted dispatch per
+    # generation (how benchmarks drove MAGMA before the scan port)
+    def period(state, trace):
+        def act_fn(feats, mask, slots, st):
+            return BL.magma(slots, st, env, mcfg)
+        return env.period(state, trace, act_fn)
+
+    run_episode(env, period, np.random.default_rng(seed))  # warmup/compile
+    t0 = time.perf_counter()
+    for i in range(legacy_episodes):
+        run_episode(env, period, np.random.default_rng(seed + 1 + i))
+    pps_host = legacy_episodes * periods / (time.perf_counter() - t0)
+
+    # ---- AFTER: whole GA episodes in one device call, vmapped over
+    # traces like every other policy
+    mag = BL.make_magma_baseline(mcfg)
+    eval_fn = make_baseline_episode_batch(env, mag)
+
+    def batched_round(i):
+        seeds = range(seed + 100 * i, seed + 100 * i + batch)
+        traces, states = stack_episodes(env, seeds)
+        keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+        jax.block_until_ready(eval_fn(states, traces, keys))
+
+    batched_round(0)                                     # warmup/compile
+    t0 = time.perf_counter()
+    for i in range(repeats):
+        batched_round(1 + i)
+    pps_scan = repeats * batch * periods / (time.perf_counter() - t0)
+
+    res = dict(batch=batch, periods=periods, population=population,
+               generations=generations,
+               periods_per_sec_hostloop=round(pps_host, 2),
+               periods_per_sec_scan_batched=round(pps_scan, 2),
+               speedup=round(pps_scan / pps_host, 2))
+    print("magma_throughput," + json.dumps(res), flush=True)
+    return res
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=32)
@@ -147,10 +215,39 @@ def main(argv=None):
     ap.add_argument("--max-rq", type=int, default=96)
     ap.add_argument("--max-jobs", type=int, default=64)
     ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--population", type=int, default=16,
+                    help="MAGMA population (paper: 100)")
+    ap.add_argument("--generations", type=int, default=8,
+                    help="MAGMA generations (paper: 100)")
+    ap.add_argument("--magma-batch", type=int, default=8,
+                    help="episodes per device call in the MAGMA arm")
+    ap.add_argument("--magma-periods", type=int, default=12,
+                    help="episode length for the MAGMA section; the "
+                         "magma arms run their own CI-sized env "
+                         "(--magma-* knobs), NOT --periods/--max-rq — "
+                         "the host-loop arm pays periods x generations "
+                         "dispatches")
+    ap.add_argument("--magma-max-rq", type=int, default=32,
+                    help="RQ slots for the MAGMA section env")
+    ap.add_argument("--magma-max-jobs", type=int, default=12,
+                    help="max jobs for the MAGMA section env")
+    ap.add_argument("--no-magma", action="store_true",
+                    help="skip the magma_throughput section")
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_rollout.json"))
     args = ap.parse_args(argv)
-    run(batch=args.batch, legacy_episodes=args.legacy_episodes,
+    results = dict(rollout=run(
+        batch=args.batch, legacy_episodes=args.legacy_episodes,
         repeats=args.repeats, periods=args.periods, max_rq=args.max_rq,
-        max_jobs=args.max_jobs, hidden=args.hidden)
+        max_jobs=args.max_jobs, hidden=args.hidden))
+    if not args.no_magma:
+        results["magma_throughput"] = run_magma(
+            batch=args.magma_batch, periods=args.magma_periods,
+            max_rq=args.magma_max_rq, max_jobs=args.magma_max_jobs,
+            population=args.population, generations=args.generations)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"rollout_json,{args.out}", flush=True)
+    return results
 
 
 if __name__ == "__main__":

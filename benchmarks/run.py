@@ -3,11 +3,20 @@
   python -m benchmarks.run            # quick CI-sized pass (default)
   python -m benchmarks.run --full     # paper-sized episode counts
   python -m benchmarks.run --only fig3,roofline
+  python -m benchmarks.run --only sweep   # scenario x policy x bw grid
 
 Output: CSV-ish lines per benchmark (stable prefixes: fig3, fig4, fig5,
-table1, table2, policy_latency, straggler, rooflinesummary) + a final
-JSON summary line.  The roofline entry renders the dry-run sweep
+table1, table2, policy_latency, straggler, rooflinesummary, sweep) + a
+final JSON summary line.  The roofline entry renders the dry-run sweep
 (runs/dryrun/all.jsonl) produced by launch/dryrun.py.
+
+Machine-readable perf-trajectory artifacts (for cross-PR regression
+tracking): ``benchmarks/sweep.py`` writes ``BENCH_sweep.json``
+(per-cell SLA rates for {default,steady,burst,diurnal,heavy_tail} x
+{fcfs,prema,herald,magma,relmas} x bandwidths, one jitted eval per
+cell) and ``benchmarks/rollout_throughput.py`` writes
+``BENCH_rollout.json`` (periods/sec + speedup for the batched rollout
+pipeline and for scan-fused vs host-loop MAGMA).
 """
 from __future__ import annotations
 
@@ -21,7 +30,7 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig4,fig5,table1,policy,"
-                         "straggler,roofline")
+                         "straggler,roofline,sweep")
     ap.add_argument("--no-magma", action="store_true",
                     help="skip the GA baseline (slowest bench)")
     args = ap.parse_args(argv)
@@ -49,6 +58,11 @@ def main(argv=None):
     if want("fig4"):
         from benchmarks import fig4_bandwidth
         results["fig4"] = fig4_bandwidth.run(quick=quick)["summary"]
+    if want("sweep"):
+        from benchmarks import sweep
+        pols = tuple(p for p in sweep.POLICIES
+                     if p != "magma" or not args.no_magma)
+        results["sweep"] = sweep.run(quick=quick, policies=pols)["summary"]
     if want("straggler"):
         from benchmarks import straggler_bench
         results["straggler"] = straggler_bench.run(quick=quick)["drop"]

@@ -1,0 +1,142 @@
+"""Scenario-sweep harness: arrival presets x schedulers x bandwidths.
+
+Sweeps the full evaluation grid the batched pipeline unlocks —
+``{default, steady, burst, diurnal, heavy_tail}`` arrival scenarios
+x ``{fcfs, prema, herald, magma, relmas}`` x shared-DRAM bandwidths —
+with ONE jitted evaluator call per cell.  Scenario presets only change
+the host-side trace data (``arrivals=`` override), so each compiled
+(env, policy) evaluator is reused across every scenario cell; MAGMA
+runs its whole per-period genetic search inside the episode scan
+(``repro.core.baselines.magma_search_scan``), batched over seeds like
+any other policy.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.sweep             # CI-sized grid
+  PYTHONPATH=src python -m benchmarks.sweep --full      # paper-sized
+  PYTHONPATH=src python -m benchmarks.sweep --smoke     # tiny (scripts/ci.sh)
+  PYTHONPATH=src python -m benchmarks.sweep --bandwidths 16,8,4
+
+Output: one ``sweep,...`` CSV-ish line per cell + ``BENCH_sweep.json``
+(per-cell sla_rate / energy / wall seconds + grid metadata) for
+regression tracking across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+from benchmarks.common import (EVAL_LOAD, EVAL_QOS_FACTOR, REPO, eval_policy,
+                               make_env)
+from repro.core import baselines as BL
+from repro.sim.arrivals import SCENARIOS
+
+POLICIES = ("fcfs", "prema", "herald", "magma", "relmas")
+
+# grid presets: (periods, max_rq, max_jobs, n_seeds, magma_pop, magma_gens)
+SIZES = {
+    "full": (60, 96, 64, 5, 24, 12),
+    "quick": (24, 48, 32, 2, 12, 6),
+    "smoke": (8, 16, 8, 2, 6, 3),
+}
+
+
+def run(*, quick: bool = True, smoke: bool = False, workload: str = "light",
+        scenarios=SCENARIOS, policies=POLICIES, bandwidths=(16.0,),
+        magma_cfg: BL.MagmaConfig | None = None,
+        out: str | None = None) -> dict:
+    size = "smoke" if smoke else ("quick" if quick else "full")
+    periods, max_rq, max_jobs, n_seeds, pop, gens = SIZES[size]
+    if smoke and scenarios is SCENARIOS:
+        scenarios = ("default", "burst")
+    mcfg = magma_cfg or BL.MagmaConfig(population=pop, generations=gens)
+    seeds = range(7200, 7200 + n_seeds)
+
+    cells: dict[str, dict] = {}
+    t_all = time.time()
+    for bw in bandwidths:
+        # one env (and thus one compiled evaluator per policy) per
+        # bandwidth; scenarios below reuse it — trace data only
+        env = make_env(workload, bandwidth=bw, periods=periods,
+                       max_rq=max_rq, max_jobs=max_jobs, load=EVAL_LOAD,
+                       qos_factor=EVAL_QOS_FACTOR)
+        for sc in scenarios:
+            arr = dataclasses.replace(env.arrivals, scenario=sc)
+            for p in policies:
+                t0 = time.time()
+                m = eval_policy(env, p, workload=workload, seeds=seeds,
+                                magma_cfg=mcfg, arrivals=arr)
+                cell = dict(sla_rate=round(m["sla_rate"], 4),
+                            energy_uj=round(m["energy_uj"], 1),
+                            wall_s=round(time.time() - t0, 2))
+                cells[f"{sc}/{p}/bw{bw:g}"] = cell
+                print(f"sweep,{sc},{p},bw={bw:g},"
+                      f"sla={cell['sla_rate']},wall={cell['wall_s']}",
+                      flush=True)
+
+    best = {}
+    for bw in bandwidths:
+        for sc in scenarios:
+            row = {p: cells[f"{sc}/{p}/bw{bw:g}"]["sla_rate"]
+                   for p in policies}
+            key = sc if len(bandwidths) == 1 else f"{sc}/bw{bw:g}"
+            best[key] = max(row, key=row.get)
+    summary = {
+        "grid": f"{len(scenarios)}x{len(policies)}x{len(bandwidths)}",
+        "best_policy_per_scenario": best,
+        "wall_s": round(time.time() - t_all, 1),
+    }
+    result = dict(
+        meta=dict(size=size, workload=workload, periods=periods,
+                  max_rq=max_rq, max_jobs=max_jobs, seeds=len(list(seeds)),
+                  magma_population=mcfg.population,
+                  magma_generations=mcfg.generations,
+                  scenarios=list(scenarios), policies=list(policies),
+                  bandwidths=list(bandwidths)),
+        cells=cells, summary=summary)
+    out = out or os.path.join(REPO, "BENCH_sweep.json")
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print("sweep_summary," + json.dumps(summary), flush=True)
+    print(f"sweep_json,{out}", flush=True)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized grid (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny 2-scenario smoke grid (CI)")
+    ap.add_argument("--workload", default="light")
+    ap.add_argument("--scenarios", default=None,
+                    help=f"comma list of {SCENARIOS}")
+    ap.add_argument("--policies", default=None,
+                    help=f"comma list of {POLICIES}")
+    ap.add_argument("--bandwidths", default="16",
+                    help="comma list of shared-DRAM GB/s values")
+    ap.add_argument("--population", type=int, default=None,
+                    help="MAGMA population override")
+    ap.add_argument("--generations", type=int, default=None,
+                    help="MAGMA generations override")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args(argv)
+    mcfg = None
+    if args.population or args.generations:
+        size = "smoke" if args.smoke else ("full" if args.full else "quick")
+        _, _, _, _, pop, gens = SIZES[size]
+        mcfg = BL.MagmaConfig(population=args.population or pop,
+                              generations=args.generations or gens)
+    run(quick=not args.full, smoke=args.smoke, workload=args.workload,
+        scenarios=tuple(args.scenarios.split(","))
+        if args.scenarios else SCENARIOS,
+        policies=tuple(args.policies.split(","))
+        if args.policies else POLICIES,
+        bandwidths=tuple(float(b) for b in args.bandwidths.split(",")),
+        magma_cfg=mcfg, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

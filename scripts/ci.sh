@@ -6,3 +6,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
+# smoke scenario sweep: exercises the scan-fused device-resident MAGMA
+# path end-to-end (tiny population/generations, 2 scenarios, ~15s);
+# SKIP_SWEEP=1 skips it
+if [ -z "${SKIP_SWEEP:-}" ]; then
+  mkdir -p runs
+  python -m benchmarks.sweep --smoke --out runs/BENCH_sweep_smoke.json
+fi

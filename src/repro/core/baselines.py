@@ -16,6 +16,23 @@ priority and an SA choice per RQ slot — and are evaluated on the
              with SLA-aware fitness, evaluated by the real contention
              engine (vmapped over the population), custom operators
              as in Kao & Krishna (crossover + gaussian/reset mutation).
+
+MAGMA ships in two equivalent drivers:
+
+- :func:`magma` — the legacy host loop (one jitted dispatch per
+  generation), kept as the "before" arm of
+  ``benchmarks/rollout_throughput.py``'s ``magma_throughput`` section;
+- :func:`magma_search_scan` — the device-resident version: the whole
+  generation loop is one ``jax.lax.scan`` carrying the PRNG key exactly
+  as the host loop splits it, so both produce identical schedules under
+  a fixed key.  :func:`make_magma_baseline` packages it with the
+  ``(slots, state, env, key)`` baseline signature so whole MAGMA
+  episodes run inside ``SchedulingEnv.episode``'s period scan and
+  ``vmap`` over traces via ``rollout.make_baseline_episode_batch`` —
+  zero host syncs from trace generation to metrics.
+
+The one-shot heuristics accept (and ignore) the trailing per-period
+``key`` that :meth:`SchedulingEnv.episode` threads to every act_fn.
 """
 from __future__ import annotations
 
@@ -72,7 +89,7 @@ def _pack_actions(prio, sa, num_sas):
 
 
 # ---------------------------------------------------------------------------
-def fcfs_h(slots, state, env):
+def fcfs_h(slots, state, env, key=None):
     """FCFS priority (earlier arrival first) + min-finish SA heuristic."""
     t = state["t"]
     prio = jnp.clip(-(slots["arrival"] - t) / (100.0 * env.cfg.t_s_us),
@@ -83,7 +100,7 @@ def fcfs_h(slots, state, env):
     return _pack_actions(prio, sa, env.num_sas), prio, sa
 
 
-def prema_h(slots, state, env):
+def prema_h(slots, state, env, key=None):
     """PREMA tokens (waiting/budget) gate + SJF among high-token jobs."""
     t = state["t"]
     token = jnp.where(slots["valid"],
@@ -102,7 +119,7 @@ def prema_h(slots, state, env):
     return _pack_actions(prio, sa, env.num_sas), prio, sa
 
 
-def herald(slots, state, env):
+def herald(slots, state, env, key=None):
     """EDF priority + load-balancing SA selection (HDA/Herald-style)."""
     t = state["t"]
     prio = jnp.clip(1.0 - (slots["deadline"] - t)
@@ -157,7 +174,7 @@ def _magma_fitness(env, state, slots, prio_pop, sa_pop):
 @functools.partial(jax.jit, static_argnames=("env", "mcfg"))
 def _magma_generation(env, mcfg, key, state, slots, prio_pop, sa_pop, fit):
     P, R = prio_pop.shape
-    ks = jax.random.split(key, 6)
+    ks = jax.random.split(key, 8)
     # tournament selection (two parent sets)
     def select(k):
         idx = jax.random.randint(k, (P, mcfg.tournament), 0, P)
@@ -169,12 +186,14 @@ def _magma_generation(env, mcfg, key, state, slots, prio_pop, sa_pop, fit):
     do_cx = jax.random.bernoulli(ks[3], mcfg.cx_prob, (P, 1))
     prio_c = jnp.where(cx & do_cx, prio_pop[pa], prio_pop[pb])
     sa_c = jnp.where(cx & do_cx, sa_pop[pa], sa_pop[pb])
-    # mutation: gaussian on priorities, random-reset on assignments
+    # mutation: gaussian on priorities, random-reset on assignments —
+    # distinct keys per draw so mutation events and magnitudes (and
+    # reset events and values) are uncorrelated
     mut = jax.random.bernoulli(ks[4], mcfg.mut_prob, (P, R))
     prio_m = jnp.clip(prio_c + mut * mcfg.mut_sigma
-                      * jax.random.normal(ks[4], (P, R)), -1.0, 1.0)
-    sa_m = jnp.where(jax.random.bernoulli(ks[5], mcfg.mut_prob, (P, R)),
-                     jax.random.randint(ks[5], (P, R), 0, env.num_sas),
+                      * jax.random.normal(ks[5], (P, R)), -1.0, 1.0)
+    sa_m = jnp.where(jax.random.bernoulli(ks[6], mcfg.mut_prob, (P, R)),
+                     jax.random.randint(ks[7], (P, R), 0, env.num_sas),
                      sa_c)
     new_fit = _magma_fitness(env, state, slots, prio_m, sa_m)
     # elitism: keep the best individual alive
@@ -186,10 +205,12 @@ def _magma_generation(env, mcfg, key, state, slots, prio_pop, sa_pop, fit):
     return prio_m, sa_m, new_fit
 
 
-def magma(slots, state, env, mcfg: MagmaConfig = MagmaConfig(), key=None):
-    """GA search per scheduling period (paper: 100 gens x 100 individuals)."""
-    if key is None:
-        key = jax.random.PRNGKey(mcfg.seed)
+def _magma_init(env, mcfg, key, state, slots):
+    """Shared GA initialisation: random population + Herald-seeded elite.
+
+    Returns (prio_pop, sa_pop, fit, key) with ``key`` already advanced,
+    so the host loop and the scan driver consume the exact same stream.
+    """
     R = env.cfg.max_rq
     P = mcfg.population
     k1, k2, key = jax.random.split(key, 3)
@@ -200,6 +221,19 @@ def magma(slots, state, env, mcfg: MagmaConfig = MagmaConfig(), key=None):
     prio_pop = prio_pop.at[0].set(hp)
     sa_pop = sa_pop.at[0].set(hs)
     fit = _magma_fitness(env, state, slots, prio_pop, sa_pop)
+    return prio_pop, sa_pop, fit, key
+
+
+def magma(slots, state, env, mcfg: MagmaConfig = MagmaConfig(), key=None):
+    """GA search per scheduling period (paper: 100 gens x 100 individuals).
+
+    Legacy host-loop driver: one jitted dispatch per generation.  Kept
+    as the throughput-benchmark "before" arm; the device-resident path
+    is :func:`magma_search_scan` / :func:`make_magma_baseline`.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(mcfg.seed)
+    prio_pop, sa_pop, fit, key = _magma_init(env, mcfg, key, state, slots)
     for _ in range(mcfg.generations):
         key, sub = jax.random.split(key)
         prio_pop, sa_pop, fit = _magma_generation(
@@ -207,6 +241,51 @@ def magma(slots, state, env, mcfg: MagmaConfig = MagmaConfig(), key=None):
     best = jnp.argmax(fit)
     prio, sa = prio_pop[best], sa_pop[best].astype(jnp.int32)
     return _pack_actions(prio, sa, env.num_sas), prio, sa
+
+
+def magma_search_scan(env, mcfg: MagmaConfig, key, state, slots):
+    """Scan-fused GA search: the whole generation loop in one trace.
+
+    Carries the PRNG key through the scan and splits it once per
+    generation exactly like :func:`magma`'s host loop, so under a fixed
+    key both drivers visit identical populations and return identical
+    schedules.  Fully traceable: runs inside ``SchedulingEnv.episode``'s
+    period scan and ``vmap``s over episodes.
+
+    Returns ``(prio, sa, elite_fit)`` where ``elite_fit`` is the
+    per-generation best fitness (monotone non-decreasing — elitism).
+    """
+    prio_pop, sa_pop, fit, key = _magma_init(env, mcfg, key, state, slots)
+
+    def gen(carry, _):
+        key, prio, sa, f = carry
+        key, sub = jax.random.split(key)
+        prio, sa, f = _magma_generation(env, mcfg, sub, state, slots,
+                                        prio, sa, f)
+        return (key, prio, sa, f), jnp.max(f)
+
+    (_, prio_pop, sa_pop, fit), elite_fit = jax.lax.scan(
+        gen, (key, prio_pop, sa_pop, fit), None, length=mcfg.generations)
+    best = jnp.argmax(fit)
+    return prio_pop[best], sa_pop[best].astype(jnp.int32), elite_fit
+
+
+@functools.lru_cache(maxsize=None)
+def make_magma_baseline(mcfg: MagmaConfig = MagmaConfig()):
+    """MAGMA as a batched-episode baseline: ``(slots, state, env, key)``.
+
+    The returned function runs the scan-fused GA for one period and is
+    memoised per ``mcfg`` so ``rollout.make_baseline_episode_batch``'s
+    per-env runner cache keys stay stable across calls.
+    """
+    def magma_b(slots, state, env, key=None):
+        if key is None:
+            key = jax.random.PRNGKey(mcfg.seed)
+        prio, sa, _ = magma_search_scan(env, mcfg, key, state, slots)
+        return _pack_actions(prio, sa, env.num_sas), prio, sa
+    magma_b.mcfg = mcfg
+    magma_b.__name__ = f"magma_p{mcfg.population}g{mcfg.generations}"
+    return magma_b
 
 
 BASELINES = {"fcfs": fcfs_h, "prema": prema_h, "herald": herald}

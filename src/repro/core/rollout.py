@@ -37,10 +37,11 @@ Metrics = dict[str, jnp.ndarray]
 # batched device-resident runners (the new hot path)
 # --------------------------------------------------------------------------
 def _policy_act_fn(params, pcfg: P.PolicyConfig):
-    """Per-period actor; ``noise`` (the per-period scan input) is the
-    pre-drawn exploration noise — RNG inside the period scan costs real
-    time on CPU, so the whole episode block is drawn in one call."""
-    def act_fn(feats, mask, slots, st, noise):
+    """Per-period actor; ``noise`` (the per-period ``aux`` scan input)
+    is the pre-drawn exploration noise — RNG inside the period scan
+    costs real time on CPU, so the whole episode block is drawn in one
+    call.  The per-period ``key`` is ignored (deterministic actor)."""
+    def act_fn(feats, mask, slots, st, key, noise):
         a = jnp.clip(P.actor_apply(params, pcfg, feats, mask) + noise,
                      -1.0, 1.0)
         prio = a[:, 0]
@@ -81,7 +82,7 @@ def make_rollout_batch(env: SchedulingEnv, pcfg: P.PolicyConfig,
     def _episodes(params, states, traces, noise):
         def one(state, trace, ep_noise):
             return env.episode(state, trace, _policy_act_fn(params, pcfg),
-                               ep_noise, collect=collect)
+                               aux=ep_noise, collect=collect)
         return jax.vmap(one)(states, traces, noise)
 
     if ndev <= 1:
@@ -130,10 +131,9 @@ def make_evaluate_batch(env: SchedulingEnv, pcfg: P.PolicyConfig):
     @jax.jit
     def eval_fn(params, states, traces) -> Metrics:
         def one(state, trace):
-            no_noise = jnp.zeros((env.cfg.periods, 1, 1))
             *_, metrics = env.episode(
                 state, trace, _policy_act_fn(params, pcfg),
-                no_noise, collect=False)
+                collect=False)
             return metrics
         return jax.vmap(one)(states, traces)
 
@@ -142,48 +142,72 @@ def make_evaluate_batch(env: SchedulingEnv, pcfg: P.PolicyConfig):
 
 
 def make_baseline_episode_batch(env: SchedulingEnv, baseline_fn: Callable):
-    """Jitted batched episode runner for a heuristic baseline."""
+    """Jitted batched episode runner for a baseline scheduler.
+
+    ``baseline_fn(slots, state, env, key)`` — the one-shot heuristics
+    ignore ``key``; MAGMA's scan-fused GA (``make_magma_baseline``)
+    consumes it, which is what lets whole GA episodes run as one device
+    call.  Returns ``eval_fn(states, traces, keys=None)`` where ``keys``
+    is one PRNG key per episode (split per period inside the trace).
+    """
     key_ = ("baseline_batch", baseline_fn)
     cache = _runner_cache(env)
     if key_ in cache:
         return cache[key_]
 
     @jax.jit
-    def eval_fn(states, traces) -> Metrics:
-        def one(state, trace):
-            def act_fn(feats, mask, slots, st, _):
-                return baseline_fn(slots, st, env)
-            dummy = jnp.zeros((env.cfg.periods,))
-            *_, metrics = env.episode(state, trace, act_fn, dummy,
+    def eval_fn(states, traces, keys=None) -> Metrics:
+        if keys is None:
+            batch = states["t"].shape[0]
+            keys = jax.vmap(
+                lambda i: jax.random.fold_in(jax.random.PRNGKey(0), i))(
+                    jnp.arange(batch))
+
+        def one(state, trace, key):
+            def act_fn(feats, mask, slots, st, k, aux):
+                return baseline_fn(slots, st, env, k)
+            *_, metrics = env.episode(state, trace, act_fn, key=key,
                                       collect=False)
             return metrics
-        return jax.vmap(one)(states, traces)
+        return jax.vmap(one)(states, traces, keys)
 
     cache[key_] = eval_fn
     return eval_fn
 
 
-def stack_episodes(env: SchedulingEnv, seeds):
-    """One fresh episode per seed, tree-stacked over the batch axis."""
-    pairs = [env.new_episode(np.random.default_rng(int(s))) for s in seeds]
+def stack_episodes(env: SchedulingEnv, seeds, arrivals=None):
+    """One fresh episode per seed, tree-stacked over the batch axis.
+
+    ``arrivals`` optionally overrides the env's arrival process (e.g. a
+    scenario preset) — the jitted runners are unaffected, so one
+    compiled evaluator serves every scenario cell of a sweep.
+    """
+    pairs = [env.new_episode(np.random.default_rng(int(s)), arrivals)
+             for s in seeds]
     traces = jax.tree.map(lambda *xs: jnp.stack(xs), *[p[0] for p in pairs])
     states = jax.tree.map(lambda *xs: jnp.stack(xs), *[p[1] for p in pairs])
     return traces, states
 
 
 def evaluate_batch(env: SchedulingEnv, pcfg: P.PolicyConfig, params,
-                   seeds) -> dict[str, float]:
+                   seeds, arrivals=None) -> dict[str, float]:
     """Mean policy metrics across seeds, one jitted device call."""
-    traces, states = stack_episodes(env, seeds)
+    traces, states = stack_episodes(env, seeds, arrivals)
     metrics = make_evaluate_batch(env, pcfg)(params, states, traces)
     return {k: float(jnp.mean(v)) for k, v in metrics.items()}
 
 
 def evaluate_batch_baseline(env: SchedulingEnv, baseline_fn: Callable,
-                            seeds) -> dict[str, float]:
-    """Mean heuristic-baseline metrics across seeds, one jitted call."""
-    traces, states = stack_episodes(env, seeds)
-    metrics = make_baseline_episode_batch(env, baseline_fn)(states, traces)
+                            seeds, arrivals=None) -> dict[str, float]:
+    """Mean baseline metrics across seeds, one jitted call.
+
+    Works for the one-shot heuristics and for scan-fused MAGMA alike:
+    each episode gets ``PRNGKey(seed)``, split per period in-trace.
+    """
+    traces, states = stack_episodes(env, seeds, arrivals)
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    metrics = make_baseline_episode_batch(env, baseline_fn)(states, traces,
+                                                            keys)
     return {k: float(jnp.mean(v)) for k, v in metrics.items()}
 
 
@@ -223,14 +247,14 @@ def make_baseline_period(env: SchedulingEnv, baseline_fn: Callable,
 
 def run_episode(env: SchedulingEnv, period_fn, rng: np.random.Generator,
                 *, params=None, key=None, sigma: float = 0.0,
-                collect: bool = False):
+                collect: bool = False, arrivals=None):
     """Run one episode with the legacy per-period Python loop.
 
     Returns (metrics, transitions|None).  Prefer ``make_rollout_batch``
     / ``evaluate_batch`` — this path pays one dispatch + host sync per
     period and exists for compatibility and as the benchmark baseline.
     """
-    trace, state = env.new_episode(rng)
+    trace, state = env.new_episode(rng, arrivals)
     transitions = [] if collect else None
     for _ in range(env.cfg.periods):
         if params is not None:

@@ -14,7 +14,11 @@ Knobs added by the batched pipeline:
   sequential semantics, just fused);
 - ``--scenario NAME``     arrival-process preset (``default``,
   ``steady``, ``burst``, ``diurnal``, ``heavy_tail`` — see
-  ``repro.sim.arrivals``).
+  ``repro.sim.arrivals``);
+- ``--eval-baselines L``  comma list of baselines ("fcfs,herald,magma")
+  evaluated once on the eval seeds before training through the batched
+  device-resident runners — MAGMA included, scan-fused — so every run
+  logs in-regime reference SLA rates next to the learning curve.
 
 Fault-tolerant training loop:
 - periodic atomic checkpoints (CheckpointManager) of the full learner
@@ -40,9 +44,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import CheckpointManager
+from repro.core import baselines as BL
 from repro.core import policy as P, ddpg as D
 from repro.core.replay import DeviceReplay
-from repro.core.rollout import evaluate_batch, make_rollout_batch
+from repro.core.rollout import (evaluate_batch, evaluate_batch_baseline,
+                                make_rollout_batch)
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.env import EnvConfig, SchedulingEnv
 from repro.workloads import build_registry
@@ -72,6 +78,12 @@ class TrainConfig:
     sigma_decay: float = 0.97
     eval_every: int = 10
     eval_seeds: int = 5
+    # comma list of baselines to score on the eval seeds before
+    # training ("" = skip); "magma" uses the scan-fused GA at the
+    # CI-sized 24x12 config (paper settings are 100x100)
+    eval_baselines: str = ""
+    magma_population: int = 24
+    magma_generations: int = 12
     seed: int = 0
     outdir: str = "runs/relmas"
     ckpt_every: int = 10
@@ -114,6 +126,21 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         start_ep = meta.get("episode", 0) + 1
         log_fn(f"[resume] restored checkpoint at episode {start_ep - 1}")
 
+    baseline_scores: dict[str, dict] = {}
+    if cfg.eval_baselines:
+        # reference points on the exact eval seeds/regime, all through
+        # the batched device-resident runners (one jitted call each)
+        eval_seed_range = range(7000, 7000 + cfg.eval_seeds)
+        for name in cfg.eval_baselines.split(","):
+            name = name.strip()
+            fn = (BL.make_magma_baseline(BL.MagmaConfig(
+                      population=cfg.magma_population,
+                      generations=cfg.magma_generations))
+                  if name == "magma" else BL.BASELINES[name])
+            m = evaluate_batch_baseline(env, fn, eval_seed_range)
+            baseline_scores[name] = {k: round(v, 4) for k, v in m.items()}
+            log_fn(f"[baseline] {name} sla={m['sla_rate']:.4f}")
+
     buf = DeviceReplay(cfg.replay_capacity, env.seq_len, env.feat_dim,
                        env.act_dim)
     # episodes are independent -> shard the collection batch over all
@@ -126,6 +153,9 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         return make_rollout_batch(env, pcfg, devices=use)
     os.makedirs(cfg.outdir, exist_ok=True)
     logf = open(os.path.join(cfg.outdir, "log.jsonl"), "a")
+    if baseline_scores:
+        logf.write(json.dumps({"baselines": baseline_scores}) + "\n")
+        logf.flush()
     rng = np.random.default_rng(cfg.seed + 1000 * start_ep)
     best = {"sla_rate": -1.0}
     history = []
@@ -182,7 +212,8 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         history.append(rec)
         start += n
     logf.close()
-    return dict(best=best, history=history, env=env, pcfg=pcfg, state=state)
+    return dict(best=best, history=history, env=env, pcfg=pcfg, state=state,
+                baselines=baseline_scores)
 
 
 def main(argv=None):

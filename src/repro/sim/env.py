@@ -106,17 +106,24 @@ class SchedulingEnv:
         trace["njl"] = self.n_layers[trace["model"]]
         return trace
 
-    def new_episode(self, rng: np.random.Generator) -> tuple[Trace, State]:
+    def new_episode(self, rng: np.random.Generator,
+                    arrivals: ArrivalConfig | None = None
+                    ) -> tuple[Trace, State]:
+        """Fresh trace+state; ``arrivals`` overrides the env's arrival
+        process (e.g. a scenario preset) without recompiling anything —
+        trace generation is host-side, the jitted episode is shared."""
         trace = self._finish_trace(
-            generate_trace(np.asarray(self.min_lat), self.arrivals, rng))
+            generate_trace(np.asarray(self.min_lat),
+                           arrivals or self.arrivals, rng))
         return trace, self.init_state(trace)
 
-    def new_episodes(self, rng: np.random.Generator,
-                     batch: int) -> tuple[Trace, State]:
+    def new_episodes(self, rng: np.random.Generator, batch: int,
+                     arrivals: ArrivalConfig | None = None
+                     ) -> tuple[Trace, State]:
         """Batched :meth:`new_episode`: all arrays gain a (batch,) axis."""
         traces = self._finish_trace(
-            generate_traces(np.asarray(self.min_lat), self.arrivals, rng,
-                            batch))
+            generate_traces(np.asarray(self.min_lat),
+                            arrivals or self.arrivals, rng, batch))
         return traces, jax.vmap(self.init_state)(traces)
 
     # ---------------- pure helpers (traceable) ----------------
@@ -276,31 +283,46 @@ class SchedulingEnv:
         return new_state, trans, info
 
     # ---------------- whole episode (traceable, vmap-able) ----------------
-    def episode(self, state: State, trace: Trace, act_fn, keys,
-                collect: bool = True):
+    def episode(self, state: State, trace: Trace, act_fn, aux=None,
+                key=None, collect: bool = True):
         """Run all ``cfg.periods`` periods inside one ``jax.lax.scan``.
 
-        act_fn(feats, mask, slots, state, aux) -> (a, prio, sa); ``aux``
-        is that period's slice of ``keys``, an arbitrary per-period scan
-        input with leading dim ``periods`` (pre-drawn exploration noise,
-        PRNG keys, or dummy zeros for deterministic policies).
+        act_fn(feats, mask, slots, state, key, aux) -> (a, prio, sa):
+
+        - ``key`` is that period's PRNG key — ``key`` (one key per
+          episode) is split into ``periods`` per-period keys inside the
+          trace, so stochastic searchers (MAGMA's in-period GA) draw
+          fresh randomness every period with zero host syncs.  When the
+          episode ``key`` is None a constant dummy is threaded instead
+          (deterministic policies and heuristics ignore it).
+        - ``aux`` is that period's slice of the ``aux`` scan input with
+          leading dim ``periods`` (the policy path's pre-drawn
+          exploration noise — RNG inside the period scan costs real
+          time on CPU, so the whole episode block is drawn up front).
 
         Entirely traceable: jit it once and ``vmap`` over stacked
-        (state, trace, keys) for device-resident batched rollouts.  The
-        final drop pass and episode metrics run inside the trace.
+        (state, trace, key, aux) for device-resident batched rollouts.
+        The final drop pass and episode metrics run inside the trace.
 
         Returns (final_state, transitions, infos, metrics) where
         transitions/infos are stacked over the leading periods axis
         (transitions is ``{}`` when ``collect=False``).
         """
-        def step(st, key):
+        periods = self.cfg.periods
+        if aux is None:
+            aux = jnp.zeros((periods,))
+        keys = (jax.random.split(key, periods) if key is not None
+                else jnp.zeros((periods, 2), jnp.uint32))
+
+        def step(st, xs):
+            k, a = xs
             new_st, trans, info = self.period(
                 st, trace,
                 lambda feats, mask, slots, s: act_fn(feats, mask, slots,
-                                                     s, key))
+                                                     s, k, a))
             return new_st, ((trans if collect else {}), info)
 
-        final, (transitions, infos) = jax.lax.scan(step, state, keys)
+        final, (transitions, infos) = jax.lax.scan(step, state, (keys, aux))
         final = self.mark_drops(final, trace, final["t"])
         return final, transitions, infos, self.metrics(final, trace)
 

@@ -1,0 +1,135 @@
+"""Scan-fused MAGMA tests: host-loop parity, batched-episode parity,
+and elite (fitness) monotonicity under elitism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core.rollout import evaluate_batch_baseline
+from repro.sim.arrivals import ArrivalConfig
+from repro.sim.env import EnvConfig, SchedulingEnv
+from repro.workloads import build_registry
+
+ECFG = EnvConfig(t_s_us=500.0, periods=6, max_rq=16, max_jobs=8)
+MCFG = BL.MagmaConfig(population=8, generations=5)
+
+
+@pytest.fixture(scope="module")
+def env():
+    reg = build_registry("light")
+    arr = ArrivalConfig(max_jobs=ECFG.max_jobs, horizon_us=ECFG.horizon_us,
+                        slack_us=2 * ECFG.t_s_us)
+    return SchedulingEnv(reg, ECFG, arr)
+
+
+@pytest.fixture(scope="module")
+def period_slots(env):
+    """A mid-episode (state, slots) pair with a populated ready queue."""
+    trace, state = env.new_episode(np.random.default_rng(0))
+    state = {**state, "t": jnp.asarray(1000.0)}
+    state = env.mark_drops(state, trace, 1000.0)
+    slots = env.build_slots(state, trace, cutoff=1000.0)
+    return state, slots
+
+
+# ---------------------------------------------------------------------------
+# scan driver vs legacy host loop
+# ---------------------------------------------------------------------------
+def test_scan_matches_host_loop_schedule(env, period_slots):
+    """Fixed key -> identical best schedule from both GA drivers."""
+    state, slots = period_slots
+    key = jax.random.PRNGKey(0)
+    _, prio_h, sa_h = BL.magma(slots, state, env, MCFG, key=key)
+    prio_s, sa_s, _ = BL.magma_search_scan(env, MCFG, key, state, slots)
+    assert np.array_equal(np.asarray(sa_h), np.asarray(sa_s))
+    assert np.allclose(np.asarray(prio_h), np.asarray(prio_s), atol=1e-6)
+
+
+def test_scan_matches_host_loop_per_generation(env, period_slots):
+    """Generation-for-generation parity: the scan's elite-fitness
+    trajectory equals a manual host loop over the same key stream."""
+    state, slots = period_slots
+    key = jax.random.PRNGKey(7)
+    _, _, elite_scan = BL.magma_search_scan(env, MCFG, key, state, slots)
+
+    prio, sa, fit, key = BL._magma_init(env, MCFG, key, state, slots)
+    elite_host = []
+    for _ in range(MCFG.generations):
+        key, sub = jax.random.split(key)
+        prio, sa, fit = BL._magma_generation(env, MCFG, sub, state, slots,
+                                             prio, sa, fit)
+        elite_host.append(float(jnp.max(fit)))
+    assert np.allclose(np.asarray(elite_scan), np.asarray(elite_host),
+                       atol=1e-5)
+
+
+def test_elite_fitness_monotone(env, period_slots):
+    """Elitism: the best individual never regresses across generations."""
+    state, slots = period_slots
+    _, _, elite = BL.magma_search_scan(env, MCFG, jax.random.PRNGKey(1),
+                                       state, slots)
+    e = np.asarray(elite)
+    assert (np.diff(e) >= -1e-5).all()
+
+
+def test_mutation_keys_are_distinct(env, period_slots):
+    """The PRNG-reuse fix: a generation step must consume distinct keys
+    for the mutation mask vs the gaussian noise (a reused key makes the
+    noise sign deterministic given the mask; with split keys the noise
+    decorrelates from the mask)."""
+    state, slots = period_slots
+    P, R = 64, env.cfg.max_rq
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 8)
+    mut = jax.random.bernoulli(ks[4], 0.5, (P, R))
+    noise = jax.random.normal(ks[5], (P, R))
+    reused = jax.random.normal(ks[4], (P, R))
+    # correlation of the mask with the sign of the actually-used noise
+    def corr(a, b):
+        a = a - a.mean()
+        b = b - b.mean()
+        return float((a * b).mean() / (a.std() * b.std() + 1e-9))
+    assert abs(corr(np.asarray(mut, np.float32),
+                    np.sign(np.asarray(noise)))) < 0.1
+    # sanity: the buggy pairing (same key) is indeed a different stream
+    assert not np.allclose(np.asarray(noise), np.asarray(reused))
+
+
+# ---------------------------------------------------------------------------
+# batched episode MAGMA vs per-period legacy driving
+# ---------------------------------------------------------------------------
+def test_batched_magma_matches_legacy_periods(env):
+    mag = BL.make_magma_baseline(MCFG)
+    seeds = (3, 4)
+    want = {}
+    for s in seeds:
+        trace, state = env.new_episode(np.random.default_rng(s))
+        keys = jax.random.split(jax.random.PRNGKey(s), env.cfg.periods)
+        for i in range(env.cfg.periods):
+            state, _, _ = env.period(
+                state, trace,
+                lambda f, m, sl, st, k=keys[i]: mag(sl, st, env, k))
+        state = env.mark_drops(state, trace, state["t"])
+        for k, v in env.metrics(state, trace).items():
+            want.setdefault(k, []).append(float(v))
+    batched = evaluate_batch_baseline(env, mag, seeds)
+    for k, v in want.items():
+        assert np.isclose(batched[k], float(np.mean(v)), atol=1e-4), k
+
+
+def test_make_magma_baseline_memoised():
+    """Same config -> same function object (keeps jit runner caches hot)."""
+    a = BL.make_magma_baseline(BL.MagmaConfig(population=8, generations=5))
+    b = BL.make_magma_baseline(BL.MagmaConfig(population=8, generations=5))
+    assert a is b
+
+
+def test_heuristics_ignore_key(env, period_slots):
+    """Baselines share one signature; heuristics are key-invariant."""
+    state, slots = period_slots
+    for name, fn in BL.BASELINES.items():
+        a0, p0, s0 = fn(slots, state, env, jax.random.PRNGKey(0))
+        a1, p1, s1 = fn(slots, state, env, jax.random.PRNGKey(9))
+        assert np.array_equal(np.asarray(s0), np.asarray(s1)), name
+        assert np.allclose(np.asarray(p0), np.asarray(p1)), name
