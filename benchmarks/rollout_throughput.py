@@ -30,6 +30,21 @@ episode runner (whole episodes, all generations, one device call).
 ``--population/--generations`` scale the GA (paper settings: 100x100).
 Acceptance bar for the scan-fused MAGMA PR: >= 5x periods/sec.
 
+The ``train_throughput`` section measures full TRAINING rounds
+(trace-gen + rollout + replay write + K DDPG updates + sigma decay):
+
+- BEFORE (the per-round host loop the driver ran before the fused
+  trainer): per-episode NumPy trace generation, one dispatch each for
+  rollout / un-donated replay write / un-donated update scan, host
+  sigma decay, and a per-round metrics sync for logging;
+- AFTER: ``core.train.make_train_rounds`` — a whole chunk of rounds in
+  ONE jitted ``lax.scan`` dispatch with the replay buffer and learner
+  state donated, metrics transferred once per chunk.
+
+Acceptance bar for the fused-trainer PR: >= 3x periods/sec at the CI
+config.  ``--only train_throughput`` runs just this section (the CI
+regression guard does).
+
 Results are also written to ``BENCH_rollout.json`` (periods/sec and
 speedups per arm) so future PRs can track regressions.
 
@@ -61,11 +76,14 @@ import numpy as np
 
 from benchmarks.common import REPO, make_env
 from repro.core import baselines as BL
+from repro.core import ddpg as D
 from repro.core import policy as P
-from repro.core.replay import DeviceReplay, ReplayBuffer
+from repro.core.replay import (DeviceReplay, ReplayBuffer, replay_add,
+                               replay_init)
 from repro.core.rollout import (make_baseline_episode_batch,
                                 make_policy_period, make_rollout_batch,
                                 run_episode, stack_episodes)
+from repro.core.train import make_train_rounds, round_keys
 from repro.sim import engine as engine_mod
 import repro.sim.env as env_mod
 
@@ -206,6 +224,106 @@ def run_magma(*, batch: int = 8, legacy_episodes: int = 1, repeats: int = 2,
     return res
 
 
+def run_train(*, rounds: int = 24, batch: int = 2, periods: int = 4,
+              max_rq: int = 16, max_jobs: int = 8, hidden: int = 8,
+              updates_per_round: int = 2, batch_size: int = 4,
+              capacity: int = 8000, warmup_rounds: int = 1,
+              sigma0: float = 0.4, sigma_min: float = 0.05,
+              sigma_decay: float = 0.97, seed: int = 0) -> dict:
+    """Per-round host training loop vs scan-fused multi-round trainer.
+
+    Both arms run identical round *logic* (collect ``batch`` episodes,
+    ring-write, ``updates_per_round`` DDPG updates, sigma decay); the
+    BEFORE arm reproduces the pre-fusion driver faithfully — NumPy
+    trace generation, three separate un-donated dispatches per round,
+    and a per-round host sync for the log record.
+
+    The defaults are the CI config: a deliberately small round (the
+    regime where per-round host overhead — dispatch, sync, the
+    un-donated O(capacity) ring copy — is visible next to compute) at
+    a realistic replay capacity.  At production-sized rounds the same
+    fusion mostly buys back the replay copy + trace-gen time.
+    """
+    env = make_env("light", periods=periods, max_rq=max_rq,
+                   max_jobs=max_jobs)
+    pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
+                          hidden=hidden)
+    dcfg = D.DDPGConfig(policy=pcfg)
+
+    # ---- BEFORE: per-round host loop (the pre-fused-trainer driver) --
+    # un-donated twins of the replay write and update scan — exactly
+    # the jits the old driver dispatched
+    add_undonated = jax.jit(replay_add)
+    upd_undonated = jax.jit(D.ddpg_update_rounds,
+                            static_argnames=("cfg", "num_updates",
+                                             "batch_size"))
+    rollout_fn = make_rollout_batch(env, pcfg)
+
+    def host_loop(n_rounds):
+        state = D.init_ddpg(jax.random.PRNGKey(seed), dcfg)
+        buf = replay_init(capacity, env.seq_len, env.feat_dim, env.act_dim)
+        rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed + 1)
+        sigma = sigma0
+        for i in range(n_rounds):
+            key, kroll, kup = jax.random.split(key, 3)
+            traces, states = env.new_episodes(rng, batch)  # host NumPy gen
+            _, trans, _, mets = rollout_fn(state.actor, states, traces,
+                                           kroll, jnp.float32(sigma))
+            flat = {k: v.reshape((-1,) + v.shape[2:])
+                    for k, v in trans.items()}
+            buf = add_undonated(buf, flat)
+            state, infos = upd_undonated(state, dcfg, buf, kup,
+                                         num_updates=updates_per_round,
+                                         batch_size=batch_size)
+            sigma = max(sigma_min, sigma * sigma_decay ** batch)
+            # the old driver logged every round -> one host sync each
+            float(jnp.mean(mets["sla_rate"]))
+            float(infos["critic_loss"][-1])
+        return state
+
+    host_loop(warmup_rounds)                             # compile
+    t0 = time.perf_counter()
+    host_loop(rounds)
+    host_secs = time.perf_counter() - t0
+
+    # ---- AFTER: one lax.scan dispatch per chunk of rounds, donated --
+    kw = dict(batch_episodes=batch, num_updates=updates_per_round,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay)
+    rounds_fn = make_train_rounds(env, dcfg, **kw)
+    flags = jnp.ones((rounds,), bool)
+
+    def fused_chunk():
+        state = D.init_ddpg(jax.random.PRNGKey(seed), dcfg)
+        buf = replay_init(capacity, env.seq_len, env.feat_dim, env.act_dim)
+        keys = round_keys(seed + 1, 0, rounds)
+        state, buf, sigma, mets = rounds_fn(state, buf, keys,
+                                            jnp.float32(sigma0), flags)
+        jax.block_until_ready(mets["sla"])               # one sync per chunk
+        return mets
+
+    fused_chunk()                                        # warmup/compile
+    t0 = time.perf_counter()
+    fused_chunk()
+    fused_secs = time.perf_counter() - t0
+
+    p_total = rounds * batch * periods
+    res = dict(rounds=rounds, batch=batch, periods=periods,
+               updates_per_round=updates_per_round, batch_size=batch_size,
+               capacity=capacity,
+               rounds_per_sec_hostloop=round(rounds / host_secs, 2),
+               rounds_per_sec_fused=round(rounds / fused_secs, 2),
+               periods_per_sec_hostloop=round(p_total / host_secs, 1),
+               periods_per_sec_fused=round(p_total / fused_secs, 1),
+               speedup=round(host_secs / fused_secs, 2))
+    print("train_throughput," + json.dumps(res), flush=True)
+    return res
+
+
+SECTIONS = ("rollout", "magma_throughput", "train_throughput")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=32)
@@ -233,17 +351,48 @@ def main(argv=None):
                     help="max jobs for the MAGMA section env")
     ap.add_argument("--no-magma", action="store_true",
                     help="skip the magma_throughput section")
+    ap.add_argument("--only", choices=SECTIONS, default=None,
+                    help="run a single section (e.g. the CI regression "
+                         "guard runs --only train_throughput)")
+    ap.add_argument("--train-rounds", type=int, default=24,
+                    help="rounds per arm in the train_throughput section")
+    ap.add_argument("--train-batch", type=int, default=2,
+                    help="episodes per round in the train_throughput "
+                         "section (its own CI-sized env, like the "
+                         "magma section)")
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_rollout.json"))
     args = ap.parse_args(argv)
-    results = dict(rollout=run(
-        batch=args.batch, legacy_episodes=args.legacy_episodes,
-        repeats=args.repeats, periods=args.periods, max_rq=args.max_rq,
-        max_jobs=args.max_jobs, hidden=args.hidden))
-    if not args.no_magma:
+
+    def want(section):
+        if args.only is not None:
+            return section == args.only
+        return not (section == "magma_throughput" and args.no_magma)
+
+    # partial runs (--only / --no-magma) merge into an existing out
+    # file instead of clobbering its other sections — `--only
+    # train_throughput --out BENCH_rollout.json` must not delete the
+    # committed rollout/magma records
+    results = {}
+    if (args.only is not None or args.no_magma) and os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                results = {k: v for k, v in json.load(f).items()
+                           if k in SECTIONS}
+        except (json.JSONDecodeError, OSError):
+            results = {}
+    if want("rollout"):
+        results["rollout"] = run(
+            batch=args.batch, legacy_episodes=args.legacy_episodes,
+            repeats=args.repeats, periods=args.periods, max_rq=args.max_rq,
+            max_jobs=args.max_jobs, hidden=args.hidden)
+    if want("magma_throughput"):
         results["magma_throughput"] = run_magma(
             batch=args.magma_batch, periods=args.magma_periods,
             max_rq=args.magma_max_rq, max_jobs=args.magma_max_jobs,
             population=args.population, generations=args.generations)
+    if want("train_throughput"):
+        results["train_throughput"] = run_train(
+            rounds=args.train_rounds, batch=args.train_batch)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)
     print(f"rollout_json,{args.out}", flush=True)

@@ -5,11 +5,44 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+CI_TMP="$(mktemp -d "${TMPDIR:-/tmp}/relmas_ci.XXXXXX")"
+trap 'rm -rf "$CI_TMP"' EXIT
 python -m pytest -x -q "$@"
 # smoke scenario sweep: exercises the scan-fused device-resident MAGMA
 # path end-to-end (tiny population/generations, 2 scenarios, ~15s);
-# SKIP_SWEEP=1 skips it
+# SKIP_SWEEP=1 skips it.  Output goes to a temp dir, NOT the repo.
 if [ -z "${SKIP_SWEEP:-}" ]; then
-  mkdir -p runs
-  python -m benchmarks.sweep --smoke --out runs/BENCH_sweep_smoke.json
+  python -m benchmarks.sweep --smoke --out "$CI_TMP/BENCH_sweep_smoke.json"
+fi
+# fused-trainer smoke: 2 single-dispatch training rounds (device-side
+# trace gen -> rollout -> donated ring write -> update scan -> sigma
+# decay) through the real driver at a tiny config; SKIP_TRAIN=1 skips
+if [ -z "${SKIP_TRAIN:-}" ]; then
+  python -m repro.launch.rl_train --workload light --episodes 4 \
+    --batch-episodes 2 --periods 6 --max-rq 16 --max-jobs 8 --hidden 8 \
+    --updates-per-episode 2 --batch-size 8 --replay-capacity 64 \
+    --warmup-episodes 2 --eval-every 100 --eval-seeds 2 \
+    --outdir "$CI_TMP/relmas_smoke"
+fi
+# bench regression guard: fresh train_throughput must stay within 30%
+# of the committed BENCH_rollout.json.  Absolute rounds/sec is machine-
+# dependent, so a failure requires BOTH the absolute fused rounds/sec
+# AND the machine-invariant fused/hostloop speedup (both arms measured
+# in the same fresh run) to regress >30%; SKIP_BENCH=1 skips
+if [ -z "${SKIP_BENCH:-}" ]; then
+  python -m benchmarks.rollout_throughput --only train_throughput \
+    --out "$CI_TMP/BENCH_rollout_fresh.json"
+  python - "$CI_TMP/BENCH_rollout_fresh.json" <<'PY'
+import json, sys
+fresh = json.load(open(sys.argv[1]))["train_throughput"]
+committed = json.load(open("BENCH_rollout.json"))["train_throughput"]
+new, old = fresh["rounds_per_sec_fused"], committed["rounds_per_sec_fused"]
+new_sp, old_sp = fresh["speedup"], committed["speedup"]
+print(f"train_throughput guard: fused rounds/sec {new} vs committed {old}; "
+      f"speedup {new_sp}x vs committed {old_sp}x")
+if new < 0.7 * old and new_sp < 0.7 * old_sp:
+    sys.exit(f"REGRESSION: fused trainer rounds/sec {new} < 70% of "
+             f"committed {old} AND speedup {new_sp}x < 70% of "
+             f"committed {old_sp}x")
+PY
 fi

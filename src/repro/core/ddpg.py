@@ -156,19 +156,18 @@ def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch) -> tuple["DDPGState", 
 ddpg_update_jit = jax.jit(ddpg_update, static_argnames=("cfg",))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "num_updates", "batch_size"))
-def ddpg_update_scan(state: DDPGState, cfg: DDPGConfig, buf: dict, key,
-                     num_updates: int,
-                     batch_size: int) -> tuple[DDPGState, dict]:
-    """Fuse ``num_updates`` DDPG updates into one ``jax.lax.scan``.
+def ddpg_update_rounds(state: DDPGState, cfg: DDPGConfig, buf: dict, key,
+                       num_updates: int,
+                       batch_size: int) -> tuple[DDPGState, dict]:
+    """Pure ``num_updates``-step DDPG update scan (traceable body).
 
-    ``buf`` is the device replay buffer dict (see
-    ``repro.core.replay``); each scan step draws its own uniform sample
-    keyed by a split of ``key`` and applies :func:`ddpg_update`, so the
-    whole sample -> update -> soft-target chain runs on device in a
-    single dispatch.  Returns (new_state, infos) with infos stacked
-    over the (num_updates,) axis.
+    Each scan step draws its own uniform replay sample keyed by a split
+    of ``key`` and applies :func:`ddpg_update`, so the whole sample ->
+    update -> soft-target chain fuses into one ``jax.lax.scan``.
+    Returns (new_state, infos) with infos stacked over the
+    (num_updates,) axis.  Compose into larger jitted programs (the
+    fused training round in ``repro.core.train``) or dispatch via
+    :func:`ddpg_update_scan`.
     """
     keys = jax.random.split(key, num_updates)
 
@@ -177,3 +176,20 @@ def ddpg_update_scan(state: DDPGState, cfg: DDPGConfig, buf: dict, key,
         return ddpg_update(st, cfg, batch)
 
     return jax.lax.scan(step, state, keys)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "num_updates", "batch_size"),
+                   donate_argnums=(0, 2))
+def ddpg_update_scan(state: DDPGState, cfg: DDPGConfig, buf: dict, key,
+                     num_updates: int,
+                     batch_size: int) -> tuple[DDPGState, dict, dict]:
+    """Jitted :func:`ddpg_update_rounds` with **donated** learner state
+    and replay buffer: the optimizer/target pytrees update in place and
+    the (read-only) buffer aliases straight through to the output
+    instead of surviving as a second copy on device.  Both donated
+    inputs are consumed — rebind to the returned ``(state, buf, infos)``.
+    """
+    new_state, infos = ddpg_update_rounds(state, cfg, buf, key,
+                                          num_updates, batch_size)
+    return new_state, buf, infos

@@ -10,6 +10,15 @@ with zero host round-trips:
   ``(ptr + arange(N)) % capacity`` (ring semantics; N <= capacity);
 - :func:`replay_sample`     uniform gather keyed by ``jax.random``.
 
+:func:`replay_add_batch` **donates** the buffer argument: the ring
+scatter aliases in place instead of duplicating the O(capacity)
+arrays every write (the buffer is by far the biggest allocation in
+the training loop).  The caller must treat the passed-in buffer as
+consumed — rebind to the return value, as :class:`DeviceReplay` and
+``repro.core.train`` do.  :func:`replay_add` is the un-jitted pure
+body for composing into larger jitted programs (the fused training
+round), where the outer jit's own donation applies.
+
 ``s2`` is the residual-RQ-only encoding written by the environment
 (Sec. 4.2); sequences are fixed padded length T (= 1 primer + max_rq
 sub-jobs).
@@ -44,13 +53,13 @@ def replay_init(capacity: int, seq_len: int, feat_dim: int,
     )
 
 
-@jax.jit
-def replay_add_batch(buf: dict, batch: dict) -> dict:
+def replay_add(buf: dict, batch: dict) -> dict:
     """Ring-write a stacked batch of transitions (leading axis N).
 
     N must not exceed the capacity (a single scatter cannot wrap the
     ring more than once); the training loop's batch_episodes * periods
-    is far below any sane capacity.
+    is far below any sane capacity.  Pure function — jit via
+    :func:`replay_add_batch` (donated) or trace into a larger program.
     """
     cap = buf["r"].shape[0]
     n = batch["r"].shape[0]
@@ -60,6 +69,11 @@ def replay_add_batch(buf: dict, batch: dict) -> dict:
     out["ptr"] = ((buf["ptr"] + n) % cap).astype(jnp.int32)
     out["size"] = jnp.minimum(buf["size"] + n, cap).astype(jnp.int32)
     return out
+
+
+# donated jit: the ring scatter updates the buffer in place (input
+# buffers are invalidated — rebind to the return value)
+replay_add_batch = jax.jit(replay_add, donate_argnums=(0,))
 
 
 def _gather(buf: dict, idx) -> dict:

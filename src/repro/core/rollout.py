@@ -58,6 +58,26 @@ def _runner_cache(env: SchedulingEnv) -> dict:
     return cache
 
 
+def collect_episodes(env: SchedulingEnv, pcfg: P.PolicyConfig, params,
+                     states, traces, key, sigma, collect: bool = True):
+    """Traceable batched policy collection: draw the whole batch's
+    exploration-noise block from ``key`` and run every episode through
+    ``env.episode`` under ``vmap``.  The single definition of the
+    noise scheme + episode wiring shared by the standalone collector
+    (:func:`make_rollout_batch`) and the fused training round
+    (``repro.core.train``).  Returns the vmapped episode outputs
+    ``(final_states, transitions, infos, metrics)``."""
+    batch = states["t"].shape[0]
+    noise = sigma * jax.random.normal(
+        key, (batch, env.cfg.periods, env.cfg.max_rq, env.act_dim))
+
+    def one(state, trace, ep_noise):
+        return env.episode(state, trace, _policy_act_fn(params, pcfg),
+                           aux=ep_noise, collect=collect)
+
+    return jax.vmap(one)(states, traces, noise)
+
+
 def make_rollout_batch(env: SchedulingEnv, pcfg: P.PolicyConfig,
                        collect: bool = True, devices=None):
     """Jitted batched collector.
@@ -79,27 +99,17 @@ def make_rollout_batch(env: SchedulingEnv, pcfg: P.PolicyConfig,
     if key_ in cache:
         return cache[key_]
 
-    def _episodes(params, states, traces, noise):
-        def one(state, trace, ep_noise):
-            return env.episode(state, trace, _policy_act_fn(params, pcfg),
-                               aux=ep_noise, collect=collect)
-        return jax.vmap(one)(states, traces, noise)
-
     if ndev <= 1:
         @jax.jit
         def rollout_batch(params, states, traces, key, sigma):
-            batch = states["t"].shape[0]
-            noise = sigma * jax.random.normal(
-                key, (batch, env.cfg.periods, env.cfg.max_rq, env.act_dim))
-            return _episodes(params, states, traces, noise)
+            return collect_episodes(env, pcfg, params, states, traces,
+                                    key, sigma, collect)
     else:
         @functools.partial(jax.pmap, in_axes=(None, 0, 0, 0, None),
                            devices=devices)
         def _prun(params, states, traces, key, sigma):
-            per_dev = states["t"].shape[0]
-            noise = sigma * jax.random.normal(
-                key, (per_dev, env.cfg.periods, env.cfg.max_rq, env.act_dim))
-            return _episodes(params, states, traces, noise)
+            return collect_episodes(env, pcfg, params, states, traces,
+                                    key, sigma, collect)
 
         def rollout_batch(params, states, traces, key, sigma):
             batch = states["t"].shape[0]
@@ -147,8 +157,14 @@ def make_baseline_episode_batch(env: SchedulingEnv, baseline_fn: Callable):
     ``baseline_fn(slots, state, env, key)`` — the one-shot heuristics
     ignore ``key``; MAGMA's scan-fused GA (``make_magma_baseline``)
     consumes it, which is what lets whole GA episodes run as one device
-    call.  Returns ``eval_fn(states, traces, keys=None)`` where ``keys``
-    is one PRNG key per episode (split per period inside the trace).
+    call.  Returns ``eval_fn(states, traces, keys=None, *, seeds=None)``
+    where ``keys`` is one PRNG key per episode (split per period inside
+    the trace); when ``keys`` is omitted they are derived from the
+    caller's episode ``seeds`` (``PRNGKey(seed)`` each, matching
+    ``evaluate_batch_baseline``) so stochastic baselines stay
+    correlated with the traces those same seeds generated — the old
+    fallback folded ``PRNGKey(0)`` by batch *index*, silently
+    decorrelating the GA's randomness from the episode seeds.
     """
     key_ = ("baseline_batch", baseline_fn)
     cache = _runner_cache(env)
@@ -156,13 +172,7 @@ def make_baseline_episode_batch(env: SchedulingEnv, baseline_fn: Callable):
         return cache[key_]
 
     @jax.jit
-    def eval_fn(states, traces, keys=None) -> Metrics:
-        if keys is None:
-            batch = states["t"].shape[0]
-            keys = jax.vmap(
-                lambda i: jax.random.fold_in(jax.random.PRNGKey(0), i))(
-                    jnp.arange(batch))
-
+    def _eval(states, traces, keys) -> Metrics:
         def one(state, trace, key):
             def act_fn(feats, mask, slots, st, k, aux):
                 return baseline_fn(slots, st, env, k)
@@ -170,6 +180,15 @@ def make_baseline_episode_batch(env: SchedulingEnv, baseline_fn: Callable):
                                       collect=False)
             return metrics
         return jax.vmap(one)(states, traces, keys)
+
+    def eval_fn(states, traces, keys=None, *, seeds=None) -> Metrics:
+        if keys is None:
+            if seeds is None:
+                raise ValueError(
+                    "pass per-episode PRNG `keys`, or the episode "
+                    "`seeds` the traces were generated from")
+            keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+        return _eval(states, traces, keys)
 
     cache[key_] = eval_fn
     return eval_fn

@@ -1,0 +1,203 @@
+"""Fused RELMAS training rounds: one dispatch per round — or per chunk.
+
+The last structural host<->device boundary in the training pipeline
+(after the device-resident rollout of PR 1 and the scan-fused MAGMA of
+PR 2) was the round loop itself: per-episode NumPy trace generation,
+a separate dispatch each for rollout / replay write / update scan, an
+un-donated O(capacity) replay copy per write, and a host sync per
+round for sigma decay + logging.  This module removes all of it:
+
+- :func:`make_train_round` builds ONE jitted, donated function that
+  runs a full training round on device: ``jax.random`` trace
+  generation (``SchedulingEnv.new_episodes_jax``) -> batched rollout
+  (``lax.scan`` over periods inside ``vmap`` over episodes, with
+  exploration noise drawn in-trace from the round key) -> replay ring
+  write (``replay_add``, aliased in place via donation) -> ``K`` DDPG
+  updates (``ddpg_update_rounds``, gated by ``do_update`` for warmup)
+  -> on-device sigma decay.  Replay buffer and ``DDPGState`` are both
+  donated: the two biggest allocations in the program update in place.
+
+- :func:`make_train_rounds` wraps the round body in ``jax.lax.scan``
+  over ``R`` rounds: a whole checkpoint/eval chunk of training becomes
+  a single dispatch, returning per-round metrics stacked over the
+  round axis so the host pays one transfer per chunk.
+
+- :func:`train_rounds_host` is the per-round host loop over the SAME
+  jitted round (same per-round keys): the numerical parity reference
+  for the fused scan (``tests/test_train_fused.py``).  The throughput
+  "before" arm in ``benchmarks/rollout_throughput.py --only
+  train_throughput`` instead reproduces the *pre-PR* driver loop
+  (NumPy trace-gen, separate un-donated dispatches, per-round syncs).
+
+Donation contract: the ``state`` and ``buf`` arguments of the returned
+callables are consumed — always rebind to the returned values (the
+driver in ``launch/rl_train.py`` does).  ``sigma`` stays a device
+scalar across rounds; per-round ``keys`` should be derived by
+``fold_in`` from a global round index so checkpoint resume replays the
+identical stream (see ``round_keys``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ddpg as D
+from repro.core.replay import replay_add
+from repro.core.rollout import _runner_cache, collect_episodes
+from repro.sim.env import SchedulingEnv
+
+Metrics = dict[str, jnp.ndarray]
+
+# update-info keys mirrored by the warmup (no-update) branch of the
+# round body — must match ddpg_update's info dict exactly
+INFO_KEYS = ("critic_loss", "actor_loss", "q_mean", "target_mean")
+
+
+def round_keys(seed: int, start_round: int, num_rounds: int) -> jnp.ndarray:
+    """Per-round PRNG keys (num_rounds, 2) folded from the global round
+    index, so a driver resuming at ``start_round`` draws the identical
+    stream the uninterrupted run would have."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(
+        jnp.arange(start_round, start_round + num_rounds))
+
+
+def _round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
+                batch_episodes: int, num_updates: int, batch_size: int,
+                sigma_min: float, sigma_decay: float, arrivals=None):
+    """Pure single-round body shared by the jitted round and the scan."""
+    pcfg = dcfg.policy
+
+    def round_fn(state: D.DDPGState, buf: dict, key, sigma, do_update):
+        ktrace, kroll, kup = jax.random.split(key, 3)
+        traces, states = env.new_episodes_jax(ktrace, batch_episodes,
+                                              arrivals)
+        _, trans, einfos, mets = collect_episodes(
+            env, pcfg, state.actor, states, traces, kroll, sigma)
+        # (episodes, periods, ...) -> (episodes * periods, ...) ring write
+        flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in trans.items()}
+        buf = replay_add(buf, flat)
+
+        def upd(st):
+            st2, infos = D.ddpg_update_rounds(st, dcfg, buf, kup,
+                                              num_updates, batch_size)
+            return st2, {k: infos[k][-1] for k in INFO_KEYS}
+
+        def no_upd(st):
+            return st, {k: jnp.zeros((), jnp.float32) for k in INFO_KEYS}
+
+        state, info = jax.lax.cond(do_update, upd, no_upd, state)
+        sigma = jnp.maximum(jnp.float32(sigma_min),
+                            sigma * sigma_decay ** batch_episodes)
+        metrics = dict(sla=jnp.mean(mets["sla_rate"]),
+                       reward=jnp.mean(einfos["reward"]),
+                       energy_uj=jnp.mean(mets["energy_uj"]),
+                       sigma=sigma, did_update=do_update, **info)
+        return state, buf, sigma, metrics
+
+    return round_fn
+
+
+def _cache_key(tag: str, dcfg, kw: dict[str, Any]):
+    return (tag, dcfg) + tuple(sorted(kw.items()))
+
+
+def make_train_round(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
+                     batch_episodes: int, num_updates: int, batch_size: int,
+                     sigma_min: float, sigma_decay: float, arrivals=None):
+    """One full training round as ONE jitted, donated device call.
+
+    Returns ``round_fn(state, buf, key, sigma, do_update)`` ->
+    ``(state, buf, sigma, metrics)``.  ``state`` and ``buf`` are
+    donated (rebind!), ``sigma`` is a device scalar, ``do_update`` a
+    device bool gating the update scan (False during warmup).
+    ``batch_episodes * env.cfg.periods`` transitions ring-write per
+    round and must fit the replay capacity (single-scatter ring).
+    Compiled callables are cached per env instance.
+    """
+    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay, arrivals=arrivals)
+    key_ = _cache_key("train_round", dcfg, kw)
+    cache = _runner_cache(env)
+    if key_ not in cache:
+        cache[key_] = jax.jit(_round_body(env, dcfg, **kw),
+                              donate_argnums=(0, 1))
+    return cache[key_]
+
+
+def make_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
+                      batch_episodes: int, num_updates: int,
+                      batch_size: int, sigma_min: float,
+                      sigma_decay: float, arrivals=None):
+    """A chunk of R rounds fused into one ``lax.scan`` dispatch.
+
+    Returns ``rounds_fn(state, buf, keys, sigma, do_update)`` ->
+    ``(state, buf, sigma, metrics)`` where ``keys`` is (R, 2) per-round
+    keys (see :func:`round_keys`), ``do_update`` a (R,) bool vector
+    (warmup rounds False), and ``metrics`` is the per-round dict
+    stacked over the leading (R,) axis — one host transfer per chunk.
+    ``state`` and ``buf`` are donated.  R is baked into the compiled
+    program by the argument shapes — one compile per distinct chunk
+    length.  The driver's eval/ckpt cadence is periodic in rounds, so
+    a run sees only a handful of distinct lengths (the steady-state
+    cycle, possibly a shorter first chunk after resume, and the tail
+    round); each compiles once and is cached on the env.
+    """
+    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay, arrivals=arrivals)
+    key_ = _cache_key("train_rounds", dcfg, kw)
+    cache = _runner_cache(env)
+    if key_ in cache:
+        return cache[key_]
+
+    round_fn = _round_body(env, dcfg, **kw)
+
+    def _scan(state, buf, keys, sigma, do_update):
+        def step(carry, xs):
+            st, bf, sg = carry
+            k, du = xs
+            st, bf, sg, m = round_fn(st, bf, k, sg, du)
+            return (st, bf, sg), m
+
+        (state, buf, sigma), metrics = jax.lax.scan(
+            step, (state, buf, sigma), (keys, do_update))
+        return state, buf, sigma, metrics
+
+    rounds_fn = jax.jit(_scan, donate_argnums=(0, 1))
+    cache[key_] = rounds_fn
+    return rounds_fn
+
+
+def train_rounds_scan(env: SchedulingEnv, dcfg: D.DDPGConfig, state, buf,
+                      keys, sigma, do_update, **kw):
+    """Call-style convenience over :func:`make_train_rounds`: scan the
+    R rounds described by ``keys``/``do_update`` in one dispatch and
+    return ``(state, buf, sigma, metrics)`` (metrics stacked over the
+    round axis, one transfer).  ``state``/``buf`` are donated."""
+    return make_train_rounds(env, dcfg, **kw)(state, buf, keys, sigma,
+                                              do_update)
+
+
+def train_rounds_host(env: SchedulingEnv, dcfg: D.DDPGConfig, state, buf,
+                      keys, sigma, do_update, **kw):
+    """Per-round host loop over the jitted single round (same keys).
+
+    The unfused reference: R separate dispatches with a host round-trip
+    each, numerically matching :func:`make_train_rounds` on identical
+    ``keys``/``do_update`` up to XLA fusion-level float differences.
+    Returns the same ``(state, buf, sigma, metrics)`` tuple with
+    metrics stacked on the host.  ``state``/``buf`` are donated by the
+    inner round — the originals are consumed here too.
+    """
+    round_fn = make_train_round(env, dcfg, **kw)
+    out: list[Metrics] = []
+    for i in range(len(do_update)):
+        state, buf, sigma, m = round_fn(state, buf, keys[i], sigma,
+                                        do_update[i])
+        out.append(m)
+    metrics = jax.tree.map(lambda *xs: jnp.stack(xs), *out)
+    return state, buf, sigma, metrics

@@ -1,20 +1,22 @@
 """RELMAS DDPG training driver (paper Sec. 4.2 / Sec. 5).
 
-Device-resident batched pipeline (see ``repro.core.rollout``): each
-round collects ``batch_episodes`` episodes in ONE jitted call
-(``lax.scan`` over periods inside ``vmap`` over episodes), ring-writes
-the stacked transitions into the device replay buffer
-(``DeviceReplay.add_batch``), and applies all of the round's DDPG
-updates in one fused ``ddpg_update_scan`` dispatch — no per-period or
-per-update host round-trips.  Evaluation runs through the jitted
-``evaluate_batch``.
+Single-dispatch training rounds (see ``repro.core.train``): each round
+— jax.random trace generation, batched rollout (``lax.scan`` over
+periods inside ``vmap`` over episodes), replay ring-write, and all of
+the round's DDPG updates plus sigma decay — is ONE jitted call with
+the replay buffer and learner state donated (updated in place, no
+O(capacity) copies).  Consecutive rounds between checkpoint/eval
+boundaries additionally fuse into a single ``lax.scan`` dispatch
+(``make_train_rounds``): the driver pays one dispatch and one metrics
+transfer per *chunk*, not per round.  Evaluation runs through the
+jitted ``evaluate_batch``.
 
-Knobs added by the batched pipeline:
-- ``--batch-episodes N``  episodes collected per device call (1 =
-  sequential semantics, just fused);
+Knobs:
+- ``--batch-episodes N``  episodes collected per training round;
 - ``--scenario NAME``     arrival-process preset (``default``,
   ``steady``, ``burst``, ``diurnal``, ``heavy_tail`` — see
-  ``repro.sim.arrivals``);
+  ``repro.sim.arrivals``; the fused round draws traces on device via
+  ``generate_traces_jax``);
 - ``--eval-baselines L``  comma list of baselines ("fcfs,herald,magma")
   evaluated once on the eval seeds before training through the batched
   device-resident runners — MAGMA included, scan-fused — so every run
@@ -23,7 +25,11 @@ Knobs added by the batched pipeline:
 Fault-tolerant training loop:
 - periodic atomic checkpoints (CheckpointManager) of the full learner
   state (+ replay is re-warmed on restart, which is sound for an
-  off-policy learner);
+  off-policy learner); checkpoint/eval cadence and crash injection are
+  scan-chunk boundaries;
+- per-round PRNG keys fold in the *global* round index
+  (``core.train.round_keys``), so a resumed run replays the identical
+  randomness stream the uninterrupted run would have;
 - ``--fail-at`` injects a crash for restart testing; on startup the
   driver auto-resumes from the latest checkpoint.
 
@@ -46,9 +52,10 @@ import numpy as np
 from repro.ckpt import CheckpointManager
 from repro.core import baselines as BL
 from repro.core import policy as P, ddpg as D
-from repro.core.replay import DeviceReplay
-from repro.core.rollout import (evaluate_batch, evaluate_batch_baseline,
-                                make_rollout_batch)
+from repro.core.replay import replay_init
+from repro.core.rollout import evaluate_batch, evaluate_batch_baseline
+from repro.core.train import (INFO_KEYS, make_train_round,
+                              make_train_rounds, round_keys)
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.env import EnvConfig, SchedulingEnv
 from repro.workloads import build_registry
@@ -103,6 +110,49 @@ def build_env(cfg: TrainConfig) -> SchedulingEnv:
     return SchedulingEnv(reg, ecfg, arr)
 
 
+def _plan_chunks(cfg: TrainConfig, start_ep: int) -> list[dict]:
+    """Group training rounds into scan chunks.
+
+    A chunk is a run of consecutive rounds with the same episode batch
+    size and no interior boundary; eval/ckpt cadence, the final round,
+    a batch-size change (the tail round), and the crash-injection round
+    all end (or, for ``fail_at``, start) a chunk.  Each chunk dict
+    carries its rounds ``[(start_ep, n), ...]``, the first round's
+    global index (for the PRNG key stream), whether to raise the
+    injected failure instead of dispatching, and the boundary actions
+    (``eval`` / ``ckpt``) the driver must take after it — the planner
+    is the single source of truth for cadence.
+    """
+    def crossed(every: int, s: int, ep: int) -> bool:
+        return (ep + 1) // every > s // every
+
+    chunks: list[dict] = []
+    cur: list[tuple[int, int]] = []
+    s = start_ep
+    while s < cfg.episodes:
+        n = min(cfg.batch_episodes, cfg.episodes - s)
+        ep = s + n - 1
+        fail_here = s <= cfg.fail_at <= ep
+        if cur and (fail_here or n != cur[0][1]):
+            chunks.append(dict(rounds=cur, fail=False, eval=False,
+                               ckpt=False))
+            cur = []
+        cur.append((s, n))
+        do_eval = crossed(cfg.eval_every, s, ep) or ep == cfg.episodes - 1
+        do_ckpt = crossed(cfg.ckpt_every, s, ep)
+        if fail_here or do_eval or do_ckpt:
+            chunks.append(dict(rounds=cur, fail=fail_here,
+                               eval=do_eval and not fail_here,
+                               ckpt=do_ckpt and not fail_here))
+            cur = []
+        s += n
+    if cur:
+        chunks.append(dict(rounds=cur, fail=False, eval=False, ckpt=False))
+    for c in chunks:
+        c["round0"] = c["rounds"][0][0] // cfg.batch_episodes
+    return chunks
+
+
 def train(cfg: TrainConfig, log_fn=print) -> dict:
     if cfg.batch_episodes < 1:
         raise ValueError(f"--batch-episodes must be >= 1, "
@@ -141,59 +191,86 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
             baseline_scores[name] = {k: round(v, 4) for k, v in m.items()}
             log_fn(f"[baseline] {name} sla={m['sla_rate']:.4f}")
 
-    buf = DeviceReplay(cfg.replay_capacity, env.seq_len, env.feat_dim,
-                       env.act_dim)
-    # episodes are independent -> shard the collection batch over all
-    # local devices when it divides evenly (pure vmap otherwise; the
-    # runner cache makes re-requesting either variant free)
-    devs = jax.local_devices()
+    if len(jax.local_devices()) > 1:
+        # the fused round is vmap-only for now: collection no longer
+        # pmap-shards over local devices (see ROADMAP PR 3 notes —
+        # sharding moves *inside* the fused round when targeting real
+        # multi-accelerator hosts)
+        log_fn(f"[note] {len(jax.local_devices())} local devices; fused "
+               f"training rounds run on one (collection sharding is a "
+               f"ROADMAP follow-up)")
 
-    def rollout_for(n: int):
-        use = devs if len(devs) > 1 and n % len(devs) == 0 else None
-        return make_rollout_batch(env, pcfg, devices=use)
+    buf = replay_init(cfg.replay_capacity, env.seq_len, env.feat_dim,
+                      env.act_dim)
     os.makedirs(cfg.outdir, exist_ok=True)
     logf = open(os.path.join(cfg.outdir, "log.jsonl"), "a")
     if baseline_scores:
         logf.write(json.dumps({"baselines": baseline_scores}) + "\n")
         logf.flush()
-    rng = np.random.default_rng(cfg.seed + 1000 * start_ep)
     best = {"sla_rate": -1.0}
     history = []
-    sigma = max(cfg.sigma_min, cfg.sigma0 * cfg.sigma_decay ** start_ep)
+    sigma = jnp.float32(max(cfg.sigma_min,
+                            cfg.sigma0 * cfg.sigma_decay ** start_ep))
 
-    start = start_ep
-    while start < cfg.episodes:
-        n = min(cfg.batch_episodes, cfg.episodes - start)
-        ep = start + n - 1                           # last episode of round
-        if start <= cfg.fail_at <= ep:
+    def trainer_kw(n: int) -> dict:
+        return dict(batch_episodes=n,
+                    num_updates=cfg.updates_per_episode * n,
+                    batch_size=cfg.batch_size, sigma_min=cfg.sigma_min,
+                    sigma_decay=cfg.sigma_decay)
+
+    for chunk in _plan_chunks(cfg, start_ep):
+        if chunk["fail"]:
             raise RuntimeError(f"injected failure at episode {cfg.fail_at}")
+        rounds = chunk["rounds"]
+        n = rounds[0][1]
+        flags = np.array([s + m > cfg.warmup_episodes for s, m in rounds])
+        keys = round_keys(cfg.seed + 1, chunk["round0"], len(rounds))
         t0 = time.time()
-        key, kroll, kup = jax.random.split(key, 3)
-        traces, states = env.new_episodes(rng, n)
-        _, trans, _, mets = rollout_for(n)(state.actor, states, traces,
-                                           kroll, jnp.float32(sigma))
-        buf.add_batch(trans)
-        info = None
-        if ep + 1 > cfg.warmup_episodes:
-            state, infos = D.ddpg_update_scan(
-                state, dcfg, buf.data, kup,
-                num_updates=cfg.updates_per_episode * n,
-                batch_size=cfg.batch_size)
-            info = jax.tree.map(lambda x: float(x[-1]), infos)
-        sigma = max(cfg.sigma_min, sigma * cfg.sigma_decay ** n)
-        rec = dict(episode=ep, batch_episodes=n,
-                   sla=round(float(jnp.mean(mets["sla_rate"])), 4),
-                   sigma=round(sigma, 4),
-                   periods_per_sec=round(n * cfg.periods
-                                         / max(time.time() - t0, 1e-9), 1),
-                   secs=round(time.time() - t0, 2))
-        if info:
-            rec.update({k: round(v, 5) for k, v in info.items()})
-        crossed = ((ep + 1) // cfg.eval_every > start // cfg.eval_every)
-        if crossed or ep == cfg.episodes - 1:
+        if len(rounds) == 1:
+            # single round (tail / tight cadence): one jitted dispatch
+            round_fn = make_train_round(env, dcfg, **trainer_kw(n))
+            state, buf, sigma, mets = round_fn(state, buf, keys[0], sigma,
+                                               bool(flags[0]))
+            mets = jax.tree.map(lambda x: np.asarray(x)[None], mets)
+        else:
+            # a whole eval/ckpt chunk of rounds in one lax.scan dispatch
+            rounds_fn = make_train_rounds(env, dcfg, **trainer_kw(n))
+            state, buf, sigma, mets = rounds_fn(state, buf, keys, sigma,
+                                                jnp.asarray(flags))
+            mets = jax.tree.map(np.asarray, mets)   # one transfer per chunk
+        elapsed = max(time.time() - t0, 1e-9)
+        chunk_eps = sum(m for _, m in rounds)
+        pps = round(chunk_eps * cfg.periods / elapsed, 1)
+
+        for i, (rs, rn) in enumerate(rounds):
+            ep = rs + rn - 1
+            rec = dict(episode=ep, batch_episodes=rn,
+                       sla=round(float(mets["sla"][i]), 4),
+                       sigma=round(float(mets["sigma"][i]), 4),
+                       periods_per_sec=pps,
+                       secs=round(elapsed / len(rounds), 3))
+            if mets["did_update"][i]:
+                rec.update({k: round(float(mets[k][i]), 5)
+                            for k in INFO_KEYS})
+            history.append(rec)
+            logf.write(json.dumps(rec) + "\n")
+            log_fn(f"[ep {ep:4d}] sla={rec['sla']:.3f} "
+                   f"sigma={rec['sigma']:.3f}")
+        logf.flush()
+
+        # chunk boundary: eval / best-checkpoint / periodic checkpoint
+        # (the planner already decided which actions this chunk ends on)
+        rs, rn = rounds[-1]
+        ep = rs + rn - 1
+        if chunk["eval"]:
             ev = evaluate_batch(env, pcfg, state.actor,
                                 seeds=range(7000, 7000 + cfg.eval_seeds))
-            rec["eval_sla"] = round(ev["sla_rate"], 4)
+            history[-1]["eval_sla"] = round(ev["sla_rate"], 4)
+            logf.write(json.dumps({"episode": ep,
+                                   "eval_sla": history[-1]["eval_sla"]})
+                       + "\n")
+            logf.flush()
+            log_fn(f"[ep {ep:4d}] eval={ev['sla_rate']:.4f}")
             if ev["sla_rate"] > best["sla_rate"]:
                 best = {**ev, "episode": ep}
                 mgr_best = CheckpointManager(
@@ -203,14 +280,8 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                                    hidden=cfg.hidden,
                                    feat_dim=env.feat_dim,
                                    act_dim=env.act_dim))
-        if (ep + 1) // cfg.ckpt_every > start // cfg.ckpt_every:
+        if chunk["ckpt"]:
             mgr.save(ep, state, dict(episode=ep))
-        logf.write(json.dumps(rec) + "\n")
-        logf.flush()
-        log_fn(f"[ep {ep:4d}] sla={rec['sla']:.3f} sigma={sigma:.3f} "
-               + (f"eval={rec.get('eval_sla')}" if "eval_sla" in rec else ""))
-        history.append(rec)
-        start += n
     logf.close()
     return dict(best=best, history=history, env=env, pcfg=pcfg, state=state,
                 baselines=baseline_scores)

@@ -25,11 +25,23 @@ so SLA numbers stay comparable across scenarios.
 :func:`generate_traces` is the batched twin of :func:`generate_trace`:
 it returns the same dict with a leading ``(batch,)`` axis on every
 array, ready to be moved to device and ``vmap``-ed over.
+
+:func:`generate_trace_jax` / :func:`generate_traces_jax` are the
+``jax.random`` twins of the NumPy generators: fully traceable (static
+``ArrivalConfig``, PRNG-key driven, fixed shapes), so trace generation
+can run *inside* a jitted training round (``repro.core.train``) with
+zero host work.  They draw from the same arrival processes but through
+a different RNG, so parity with the NumPy path is distributional, not
+sample-exact (see ``tests/test_train_fused.py``); the NumPy generators
+remain the oracle for scenario semantics and for host-side consumers
+(sweeps, the legacy benchmark arms).
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 QOS_MULT = {"high": 0.8, "medium": 1.0, "low": 1.2}
@@ -143,3 +155,92 @@ def generate_traces(min_lat_us: np.ndarray, cfg: ArrivalConfig,
     """
     traces = [generate_trace(min_lat_us, cfg, rng) for _ in range(batch)]
     return {k: np.stack([t[k] for t in traces]) for k in traces[0]}
+
+
+# --------------------------------------------------------------------------
+# jax.random twins (traceable; used inside the fused training round)
+# --------------------------------------------------------------------------
+# candidate overdraw for the diurnal thinning pass: acceptance is at
+# least rate_min/peak = 1/3, so 8x gives ~2.7x the needed points even
+# in the worst case; shortfalls degrade gracefully (the unfilled slots
+# surface as +inf arrivals, i.e. horizon padding).
+_DIURNAL_OVERDRAW = 8
+
+
+def _arrivals_jax(cfg: ArrivalConfig, mean_ia, J: int, key) -> jnp.ndarray:
+    """Absolute arrival times (J,) for the configured scenario.
+
+    Mirrors :func:`_interarrivals` process-for-process; ``cfg`` is
+    static, everything else traces.  The diurnal thinning loop becomes
+    a fixed-size candidate pool (homogeneous Poisson at the peak rate,
+    thinned in one vectorized accept/reject) instead of sequential
+    rejection.
+    """
+    sc = cfg.scenario
+    if sc in ("default", "heavy_tail"):
+        a = cfg.pareto_shape if sc == "default" else 1.2
+        clip = 50.0 if sc == "default" else 200.0
+        xm = mean_ia * (a - 1.0) / a
+        # numpy's rng.pareto is the Lomax 1 + X draw folded into
+        # xm * (1 + pareto) == xm * X with X ~ Pareto(a, mode 1)
+        inter = xm * jax.random.pareto(key, a, (J,))
+        inter = jnp.minimum(inter, clip * mean_ia)
+    elif sc == "steady":
+        inter = mean_ia * jax.random.uniform(key, (J,), minval=0.8,
+                                             maxval=1.2)
+    elif sc == "burst":
+        bs = max(1, cfg.burst_size)
+        intra = 0.1 * mean_ia
+        gap = bs * mean_ia - (bs - 1) * intra
+        n_bursts = -(-J // bs)
+        gaps = gap * jax.random.uniform(key, (n_bursts,), minval=0.5,
+                                        maxval=1.5)
+        inter = jnp.full((J,), intra, jnp.float32).at[::bs].set(gaps)
+    elif sc == "diurnal":
+        base = 1.0 / mean_ia
+        peak = 1.5 * base
+        H = jnp.maximum(cfg.horizon_us, mean_ia)
+        kg, ka = jax.random.split(key)
+        C = _DIURNAL_OVERDRAW * J
+        t = jnp.cumsum(jax.random.exponential(kg, (C,)) / peak)
+        rate = base * (1.0 + 0.5 * jnp.sin(2.0 * jnp.pi * t / H))
+        accept = jax.random.uniform(ka, (C,)) <= rate / peak
+        sel = jnp.sort(jnp.where(accept, t, jnp.inf))[:J]
+        return sel.at[0].set(0.0).astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown scenario {sc!r}; pick one of {SCENARIOS}")
+    return jnp.cumsum(inter).at[0].set(0.0).astype(jnp.float32)
+
+
+def generate_trace_jax(min_lat_us: jnp.ndarray, cfg: ArrivalConfig,
+                       key) -> dict[str, jnp.ndarray]:
+    """Traceable :func:`generate_trace`: same dict, drawn via ``key``.
+
+    ``cfg`` must be static under jit; ``min_lat_us`` may trace.  Parity
+    with the NumPy generator is distributional (different RNG), which
+    is all the training loop needs — episodes are i.i.d. draws of the
+    configured arrival process either way.
+    """
+    n_models = min_lat_us.shape[0]
+    mean_lat = jnp.mean(min_lat_us)
+    lam = cfg.load * cfg.eff_parallelism / mean_lat
+    J = cfg.max_jobs
+    karr, kmod = jax.random.split(key)
+    arrival = _arrivals_jax(cfg, 1.0 / lam, J, karr)
+    model = jax.random.randint(kmod, (J,), 0, n_models, jnp.int32)
+    qf = cfg.qos_factor * QOS_MULT[cfg.qos_level]
+    q = qf * min_lat_us[model] + cfg.slack_us
+    deadline = arrival + q
+    pad = arrival > cfg.horizon_us
+    big = jnp.float32(1e30)
+    return dict(arrival=jnp.where(pad, big, arrival).astype(jnp.float32),
+                model=model,
+                deadline=jnp.where(pad, big, deadline).astype(jnp.float32),
+                q=q.astype(jnp.float32))
+
+
+def generate_traces_jax(min_lat_us: jnp.ndarray, cfg: ArrivalConfig, key,
+                        batch: int) -> dict[str, jnp.ndarray]:
+    """Batched :func:`generate_trace_jax`, vmapped over per-episode keys."""
+    keys = jax.random.split(key, batch)
+    return jax.vmap(lambda k: generate_trace_jax(min_lat_us, cfg, k))(keys)

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.costmodel.registry import Registry
-from repro.sim.arrivals import ArrivalConfig, generate_trace, generate_traces
+from repro.sim.arrivals import (ArrivalConfig, generate_trace,
+                                generate_traces, generate_traces_jax)
 from repro.sim.engine import simulate_jax, INF
 
 State = dict[str, Any]
@@ -124,6 +125,20 @@ class SchedulingEnv:
         traces = self._finish_trace(
             generate_traces(np.asarray(self.min_lat),
                             arrivals or self.arrivals, rng, batch))
+        return traces, jax.vmap(self.init_state)(traces)
+
+    def new_episodes_jax(self, key, batch: int,
+                         arrivals: ArrivalConfig | None = None
+                         ) -> tuple[Trace, State]:
+        """Fully traceable :meth:`new_episodes`: traces drawn via
+        ``jax.random`` (``generate_traces_jax``, vmapped over per-episode
+        key splits), so a jitted training round can generate its own
+        episodes on device — no per-round host trace loop.  ``batch``
+        and ``arrivals`` must be static under jit; the NumPy path stays
+        the oracle for the arrival-process semantics."""
+        traces = self._finish_trace(
+            generate_traces_jax(self.min_lat, arrivals or self.arrivals,
+                                key, batch))
         return traces, jax.vmap(self.init_state)(traces)
 
     # ---------------- pure helpers (traceable) ----------------

@@ -147,15 +147,20 @@ def test_ddpg_update_scan_runs_and_steps(env, pcfg, params):
     buf = DeviceReplay(128, env.seq_len, env.feat_dim, env.act_dim)
     buf.add_batch(trans)
 
-    st2, infos = D.ddpg_update_scan(st, dcfg, buf.data,
-                                    jax.random.PRNGKey(3),
-                                    num_updates=4, batch_size=8)
+    # ddpg_update_scan donates state + buffer: snapshot the actor on
+    # the host first, and rebind the buffer to the aliased output
+    actor_before = jax.tree.map(np.asarray, st.actor)
+    st2, buf.data, infos = D.ddpg_update_scan(st, dcfg, buf.data,
+                                              jax.random.PRNGKey(3),
+                                              num_updates=4, batch_size=8)
     assert int(st2.step) == 4
     assert infos["critic_loss"].shape == (4,)
     assert np.isfinite(np.asarray(infos["critic_loss"])).all()
+    # the donated buffer aliases through unchanged and stays usable
+    assert int(buf.data["size"]) == len(SEEDS) * ECFG.periods
     # parameters actually moved
     delta = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
-                         st.actor, st2.actor)
+                         actor_before, st2.actor)
     assert max(jax.tree.leaves(delta)) > 0.0
 
 

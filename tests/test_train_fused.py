@@ -1,0 +1,240 @@
+"""Fused trainer tests: device-side trace generation (jax.random twin
+of the NumPy oracle), replay donation + ring wrap-around, and the
+scan-fused multi-round trainer's parity with the per-round host loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core import ddpg as D
+from repro.core import policy as P
+from repro.core.replay import replay_add_batch, replay_init, replay_sample
+from repro.core.rollout import (evaluate_batch, make_baseline_episode_batch,
+                                stack_episodes)
+from repro.core.train import (make_train_round, round_keys,
+                              train_rounds_host, train_rounds_scan)
+from repro.sim.arrivals import (SCENARIOS, ArrivalConfig, generate_traces,
+                                generate_traces_jax, scenario_preset)
+from repro.sim.env import EnvConfig, SchedulingEnv
+from repro.workloads import build_registry
+
+ECFG = EnvConfig(t_s_us=500.0, periods=6, max_rq=16, max_jobs=8)
+
+
+@pytest.fixture(scope="module")
+def env():
+    reg = build_registry("light")
+    arr = ArrivalConfig(max_jobs=ECFG.max_jobs, horizon_us=ECFG.horizon_us,
+                        slack_us=2 * ECFG.t_s_us)
+    return SchedulingEnv(reg, ECFG, arr)
+
+
+@pytest.fixture(scope="module")
+def dcfg(env):
+    pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
+                          hidden=8)
+    return D.DDPGConfig(policy=pcfg)
+
+
+TRAIN_KW = dict(batch_episodes=2, num_updates=3, batch_size=8,
+                sigma_min=0.05, sigma_decay=0.97)
+
+
+# ---------------------------------------------------------------------------
+# jax.random trace generation vs the NumPy oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_generate_traces_jax_matches_numpy_distribution(env, scenario):
+    """Different RNGs -> parity is distributional: the arrival process
+    statistics must agree with the NumPy oracle within tolerance."""
+    cfg = scenario_preset(scenario, max_jobs=64, horizon_us=30_000.0,
+                          slack_us=1000.0)
+    min_lat = np.asarray(env.min_lat)
+    jt = generate_traces_jax(env.min_lat, cfg, jax.random.PRNGKey(0), 256)
+    nt = generate_traces(min_lat, cfg, np.random.default_rng(0), 256)
+
+    def stats(tr):
+        a = np.asarray(tr["arrival"], np.float64)
+        live = a < 1e29
+        inter = np.concatenate([np.diff(a[i][live[i]])
+                                for i in range(a.shape[0])])
+        return (live.sum(1).mean(), inter.mean(),
+                np.asarray(tr["q"], np.float64)[live].mean())
+
+    live_j, ia_j, q_j = stats(jt)
+    live_n, ia_n, q_n = stats(nt)
+    # heavy_tail is alpha=1.2 Pareto: infinite variance -> loose mean tol
+    tol = 0.25 if scenario == "heavy_tail" else 0.1
+    assert live_j == pytest.approx(live_n, rel=0.1)
+    assert ia_j == pytest.approx(ia_n, rel=tol)
+    assert q_j == pytest.approx(q_n, rel=0.1)
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_generate_traces_jax_valid_and_deterministic(env, scenario):
+    cfg = scenario_preset(scenario, max_jobs=16, horizon_us=ECFG.horizon_us,
+                          slack_us=2 * ECFG.t_s_us)
+    tr = generate_traces_jax(env.min_lat, cfg, jax.random.PRNGKey(3), 4)
+    a = np.asarray(tr["arrival"])
+    live = a < 1e29
+    assert live.sum() > 0
+    for i in range(4):
+        ai = a[i][live[i]]
+        assert ai[0] == 0.0 and (np.diff(ai) >= 0).all()
+    assert (np.asarray(tr["q"])[live] > 0).all()
+    assert (np.asarray(tr["deadline"])[live] >= a[live]).all()
+    # same key -> same traces; different episodes decorrelate
+    tr2 = generate_traces_jax(env.min_lat, cfg, jax.random.PRNGKey(3), 4)
+    assert np.array_equal(a, np.asarray(tr2["arrival"]))
+    assert not np.array_equal(a[0], a[1])
+
+
+def test_new_episodes_jax_state_matches_trace(env):
+    traces, states = env.new_episodes_jax(jax.random.PRNGKey(1), 3)
+    assert traces["arrival"].shape == (3, ECFG.max_jobs)
+    assert traces["njl"].shape == (3, ECFG.max_jobs)
+    assert states["nls"].shape == (3, ECFG.max_jobs)
+    assert np.array_equal(np.asarray(states["jready"]),
+                          np.asarray(traces["arrival"]))
+    # traceable end-to-end: usable under jit with static batch
+    jitted = jax.jit(lambda k: env.new_episodes_jax(k, 3))
+    t2, _ = jitted(jax.random.PRNGKey(1))
+    assert np.array_equal(np.asarray(t2["arrival"]),
+                          np.asarray(traces["arrival"]))
+
+
+# ---------------------------------------------------------------------------
+# replay ring wrap-around under donation
+# ---------------------------------------------------------------------------
+def _batch(r_values, T=3, F=2, G=1):
+    n = len(r_values)
+    return dict(s=jnp.zeros((n, T, F)), mask=jnp.ones((n, T), bool),
+                a=jnp.zeros((n, T - 1, G)),
+                r=jnp.asarray(r_values, jnp.float32),
+                s2=jnp.zeros((n, T, F)), mask2=jnp.ones((n, T), bool))
+
+
+def test_replay_wraparound_keeps_newest_with_donation():
+    """Writing > capacity transitions across several donated add_batch
+    calls keeps exactly the newest `capacity` entries, and sampling
+    never returns stale (overwritten) slots."""
+    cap = 8
+    buf = replay_init(cap, 3, 2, 1)
+    written = []
+    for lo in range(0, 15, 5):                 # three writes of 5 -> 15 > cap
+        vals = list(range(lo, lo + 5))
+        written += vals
+        buf = replay_add_batch(buf, _batch(vals))   # donated: rebind
+    assert int(buf["size"]) == cap
+    assert int(buf["ptr"]) == 15 % cap
+    newest = set(written[-cap:])
+    assert set(np.asarray(buf["r"]).tolist()) == newest
+    s = replay_sample(buf, jax.random.PRNGKey(0), 128)
+    assert set(np.asarray(s["r"]).tolist()) <= newest
+
+
+def test_replay_add_batch_donates_input():
+    buf = replay_init(8, 3, 2, 1)
+    old_r = buf["r"]
+    buf = replay_add_batch(buf, _batch([1.0]))
+    assert float(buf["r"][0]) == 1.0
+    with pytest.raises(RuntimeError, match="deleted"):
+        old_r.block_until_ready()              # input buffer was consumed
+
+
+# ---------------------------------------------------------------------------
+# fused multi-round trainer
+# ---------------------------------------------------------------------------
+def _init(dcfg, env, cap=64):
+    state = D.init_ddpg(jax.random.PRNGKey(1), dcfg)
+    buf = replay_init(cap, env.seq_len, env.feat_dim, env.act_dim)
+    return state, buf
+
+
+def test_train_rounds_scan_matches_host_loop(env, dcfg):
+    """Acceptance parity: the lax.scan-fused chunk and the per-round
+    host loop produce the same learner (same keys, same rounds), and
+    the eval SLA of both actors agrees within tolerance."""
+    keys = round_keys(7, 0, 3)
+    flags = jnp.array([False, True, True])
+
+    state_f, buf_f = _init(dcfg, env)
+    state_f, buf_f, sigma_f, mets_f = train_rounds_scan(
+        env, dcfg, state_f, buf_f, keys, jnp.float32(0.4), flags,
+        **TRAIN_KW)
+
+    state_h, buf_h = _init(dcfg, env)
+    state_h, buf_h, sigma_h, mets_h = train_rounds_host(
+        env, dcfg, state_h, buf_h, keys, jnp.float32(0.4), flags,
+        **TRAIN_KW)
+
+    assert np.allclose(np.asarray(mets_f["sla"]),
+                       np.asarray(mets_h["sla"]), atol=1e-5)
+    assert np.allclose(np.asarray(mets_f["critic_loss"]),
+                       np.asarray(mets_h["critic_loss"]), atol=1e-4)
+    assert float(sigma_f) == pytest.approx(float(sigma_h), abs=1e-6)
+    deltas = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                          state_f.actor, state_h.actor)
+    assert max(jax.tree.leaves(deltas)) < 1e-4
+    # the trained policies evaluate identically on held-out seeds
+    ev_f = evaluate_batch(env, dcfg.policy, state_f.actor, seeds=(11, 12))
+    ev_h = evaluate_batch(env, dcfg.policy, state_h.actor, seeds=(11, 12))
+    assert ev_f["sla_rate"] == pytest.approx(ev_h["sla_rate"], abs=1e-3)
+
+
+def test_train_round_warmup_skips_updates(env, dcfg):
+    state, buf = _init(dcfg, env)
+    before = jax.tree.map(np.asarray, state.actor)
+    round_fn = make_train_round(env, dcfg, **TRAIN_KW)
+    state, buf, sigma, mets = round_fn(state, buf,
+                                       jax.random.PRNGKey(0),
+                                       jnp.float32(0.4), False)
+    # no update ran: params untouched, step still 0, infos zeroed
+    deltas = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                          before, state.actor)
+    assert max(jax.tree.leaves(deltas)) == 0.0
+    assert int(state.step) == 0
+    assert float(mets["critic_loss"]) == 0.0 and not bool(mets["did_update"])
+    # but experience was still collected and sigma still decayed
+    assert int(buf["size"]) == TRAIN_KW["batch_episodes"] * ECFG.periods
+    assert float(sigma) < 0.4
+
+
+def test_train_round_fills_ring_and_updates(env, dcfg):
+    state, buf = _init(dcfg, env)
+    round_fn = make_train_round(env, dcfg, **TRAIN_KW)
+    state, buf, sigma, mets = round_fn(state, buf, jax.random.PRNGKey(0),
+                                       jnp.float32(0.4), True)
+    assert int(state.step) == TRAIN_KW["num_updates"]
+    assert bool(mets["did_update"])
+    assert np.isfinite(float(mets["critic_loss"]))
+    assert 0.0 <= float(mets["sla"]) <= 1.0
+
+
+def test_round_keys_resume_continuity():
+    """A resumed driver must replay the identical key stream."""
+    full = np.asarray(round_keys(0, 0, 6))
+    resumed = np.asarray(round_keys(0, 4, 2))
+    assert np.array_equal(full[4:], resumed)
+    assert len({tuple(k) for k in full}) == 6        # all distinct
+
+
+# ---------------------------------------------------------------------------
+# baseline runner key derivation (satellite fix)
+# ---------------------------------------------------------------------------
+def test_baseline_batch_keys_derived_from_seeds(env):
+    """Omitting keys now derives them from the episode seeds (instead
+    of folding PRNGKey(0) by batch index), so a stochastic baseline
+    sees randomness correlated with the traces those seeds built."""
+    seeds = (3, 4)
+    traces, states = stack_episodes(env, seeds)
+    mag = BL.make_magma_baseline(BL.MagmaConfig(population=4, generations=2))
+    eval_fn = make_baseline_episode_batch(env, mag)
+    explicit = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    m_keys = eval_fn(states, traces, explicit)
+    m_seeds = eval_fn(states, traces, seeds=seeds)
+    for k in m_keys:
+        assert np.allclose(np.asarray(m_keys[k]), np.asarray(m_seeds[k]))
+    with pytest.raises(ValueError, match="seeds"):
+        eval_fn(states, traces)
