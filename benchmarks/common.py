@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.ckpt import restore_checkpoint
 from repro.core import baselines as BL
+from repro.costmodel import DEFAULT_MAS
 from repro.core import policy as P
 from repro.core.rollout import (evaluate_batch, evaluate_batch_baseline,
                                 run_episode)
@@ -45,14 +46,24 @@ CKPTS = {w: _ckpt(w) for w in ("light", "heavy", "mixed")}
 
 
 def make_env(workload: str, *, qos: str = "medium", qos_factor: float = 3.0,
-             load: float = 0.9, bandwidth: float = 16.0,
+             load: float = 0.9, bandwidth: float = 0.0,
              t_s_us: float = 500.0, periods: int = 60, max_rq: int = 96,
-             max_jobs: int = 64, scenario: str = "default") -> SchedulingEnv:
+             max_jobs: int = 64, scenario: str = "default",
+             fleet: str = "paper6", registry=None) -> SchedulingEnv:
     """Defaults MATCH launch/rl_train.py's training environment — the
     trained checkpoints are evaluated in-distribution (the paper trains
     RELMAS per scenario); shorter horizons cannot even complete a Heavy
-    job (InceptionV3 min latency 18 ms vs 0.6*T_S*periods horizon)."""
-    reg = build_registry(workload)
+    job (InceptionV3 min latency 18 ms vs 0.6*T_S*periods horizon).
+
+    ``fleet`` selects the accelerator platform (a preset name from
+    ``repro.costmodel.fleets`` or a MASConfig): the registry is
+    re-characterized on it and the env's feature/action dims follow its
+    ``num_sas``.  ``bandwidth <= 0`` (the default, matching rl_train's
+    ``--bandwidth-gbps 0``) uses the fleet's ``dram_gbps``.
+    ``registry`` skips characterization with a prebuilt table set
+    (sweeps reuse one registry across their bandwidth cells)."""
+    reg = registry if registry is not None else \
+        build_registry(workload, mas=fleet)
     ecfg = EnvConfig(t_s_us=t_s_us, periods=periods, max_rq=max_rq,
                      max_jobs=max_jobs, bandwidth_gbps=bandwidth)
     arr = ArrivalConfig(max_jobs=max_jobs, load=load, qos_factor=qos_factor,
@@ -64,10 +75,25 @@ def make_env(workload: str, *, qos: str = "medium", qos_factor: float = 3.0,
 _RELMAS_CACHE: dict = {}
 
 
+def _fleet_id(mas):
+    """Identity used for checkpoint matching and the params cache:
+    the preset name when there is a meaningful one, the paper platform
+    for value-equal anonymous configs, else the (hashable) config
+    itself — two distinct ad-hoc platforms never collide, and only a
+    named preset can ever match a checkpoint's recorded fleet."""
+    name = getattr(mas, "name", None)
+    if name and name != "custom":
+        return name
+    if (mas.sas, mas.dram_gbps) == (DEFAULT_MAS.sas, DEFAULT_MAS.dram_gbps):
+        return "paper6"
+    return mas
+
+
 def load_relmas(env: SchedulingEnv, workload: str, hidden: int = 64):
-    # memoised per (workload, dims): sweep grids evaluate the same
-    # checkpoint once per scenario/bandwidth cell otherwise
-    ckey = (workload, hidden, env.feat_dim, env.act_dim)
+    # memoised per (workload, dims, fleet): sweep grids evaluate the
+    # same checkpoint once per scenario/bandwidth cell otherwise
+    fleet = _fleet_id(env.registry.mas)
+    ckey = (workload, hidden, env.feat_dim, env.act_dim, fleet)
     if ckey in _RELMAS_CACHE:
         return _RELMAS_CACHE[ckey]
     pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
@@ -77,8 +103,13 @@ def load_relmas(env: SchedulingEnv, workload: str, hidden: int = 64):
     trained = False
     if ck and os.path.isdir(ck):
         try:
-            params, _, _ = restore_checkpoint(ck, params)
-            trained = True
+            restored, _, meta = restore_checkpoint(ck, params)
+            # checkpoints are platform-specific: a same-width fleet
+            # restores shape-clean but carries another platform's
+            # policy — only accept a fleet match (pre-fleet-era
+            # checkpoints were all trained on paper6)
+            if meta.get("fleet", "paper6") == fleet:
+                params, trained = restored, True
         except (KeyError, ValueError, FileNotFoundError):
             pass
     _RELMAS_CACHE[ckey] = (params, pcfg, trained)

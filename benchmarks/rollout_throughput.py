@@ -45,8 +45,13 @@ Acceptance bar for the fused-trainer PR: >= 3x periods/sec at the CI
 config.  ``--only train_throughput`` runs just this section (the CI
 regression guard does).
 
+The ``fleet_scaling`` section reports batched-rollout periods/sec per
+accelerator-fleet preset (``repro.costmodel.fleets``) — small (4-SA) vs
+paper (6-SA) vs large (8-SA) platforms, one compiled evaluator each.
+
 Results are also written to ``BENCH_rollout.json`` (periods/sec and
-speedups per arm) so future PRs can track regressions.
+speedups per arm; schema in docs/BENCHMARKS.md) so future PRs can
+track regressions.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.rollout_throughput --batch 32 \
@@ -321,7 +326,54 @@ def run_train(*, rounds: int = 24, batch: int = 2, periods: int = 4,
     return res
 
 
-SECTIONS = ("rollout", "magma_throughput", "train_throughput")
+def run_fleet_scaling(*, fleets=("2simba_2eyeriss", "paper6",
+                                 "4simba_4eyeriss"),
+                      batch: int = 8, repeats: int = 2, periods: int = 24,
+                      max_rq: int = 48, max_jobs: int = 32, hidden: int = 32,
+                      sigma: float = 0.2, seed: int = 0) -> dict:
+    """Batched-rollout periods/sec per accelerator-fleet preset.
+
+    The fleet sets ``num_sas`` and therefore the engine's per-SA
+    reduction width, the slot cost/bw table width and the policy
+    feature/action dims — this section shows how collection throughput
+    scales from a small (4-SA) to a large (8-SA) platform, each fleet
+    with its own compiled evaluator (shape change = recompile).
+    """
+    out: dict[str, dict] = {}
+    for fl in fleets:
+        env = make_env("light", fleet=fl, periods=periods, max_rq=max_rq,
+                       max_jobs=max_jobs)
+        pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
+                              hidden=hidden)
+        params = P.init_actor(jax.random.PRNGKey(seed), pcfg)
+        rollout_fn = make_rollout_batch(env, pcfg)
+
+        def one_round(i):
+            traces, states = env.new_episodes(
+                np.random.default_rng(seed + i), batch)
+            _, trans, _, mets = rollout_fn(params, states, traces,
+                                           jax.random.PRNGKey(100 + i),
+                                           sigma)
+            jax.block_until_ready(mets["sla_rate"])
+
+        one_round(0)                                     # warmup/compile
+        t0 = time.perf_counter()
+        for i in range(repeats):
+            one_round(1 + i)
+        pps = repeats * batch * periods / (time.perf_counter() - t0)
+        out[fl] = dict(num_sas=env.num_sas, feat_dim=env.feat_dim,
+                       periods_per_sec=round(pps, 1))
+    small = min(out.values(), key=lambda r: r["num_sas"])
+    large = max(out.values(), key=lambda r: r["num_sas"])
+    res = dict(batch=batch, periods=periods, fleets=out,
+               small_vs_large=round(small["periods_per_sec"]
+                                    / large["periods_per_sec"], 2))
+    print("fleet_scaling," + json.dumps(res), flush=True)
+    return res
+
+
+SECTIONS = ("rollout", "magma_throughput", "train_throughput",
+            "fleet_scaling")
 
 
 def main(argv=None):
@@ -360,6 +412,10 @@ def main(argv=None):
                     help="episodes per round in the train_throughput "
                          "section (its own CI-sized env, like the "
                          "magma section)")
+    ap.add_argument("--fleets", default="2simba_2eyeriss,paper6,"
+                    "4simba_4eyeriss",
+                    help="fleet presets for the fleet_scaling section "
+                         "(small vs large platforms)")
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_rollout.json"))
     args = ap.parse_args(argv)
 
@@ -393,6 +449,9 @@ def main(argv=None):
     if want("train_throughput"):
         results["train_throughput"] = run_train(
             rounds=args.train_rounds, batch=args.train_batch)
+    if want("fleet_scaling"):
+        results["fleet_scaling"] = run_fleet_scaling(
+            fleets=tuple(args.fleets.split(",")))
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)
     print(f"rollout_json,{args.out}", flush=True)

@@ -6,17 +6,19 @@
   python -m benchmarks.run --only sweep   # scenario x policy x bw grid
 
 Output: CSV-ish lines per benchmark (stable prefixes: fig3, fig4, fig5,
-table1, table2, policy_latency, straggler, rooflinesummary, sweep) + a
-final JSON summary line.  The roofline entry renders the dry-run sweep
+table1, table2 — both emitted by the table1 entry — policy_latency,
+straggler, rooflinesummary, sweep) + a final JSON summary line.  The roofline entry renders the dry-run sweep
 (runs/dryrun/all.jsonl) produced by launch/dryrun.py.
 
 Machine-readable perf-trajectory artifacts (for cross-PR regression
-tracking): ``benchmarks/sweep.py`` writes ``BENCH_sweep.json``
-(per-cell SLA rates for {default,steady,burst,diurnal,heavy_tail} x
+tracking; schemas in docs/BENCHMARKS.md): ``benchmarks/sweep.py``
+writes ``BENCH_sweep.json`` (per-cell SLA rates for fleet presets x
+{default,steady,burst,diurnal,heavy_tail} x
 {fcfs,prema,herald,magma,relmas} x bandwidths, one jitted eval per
-cell) and ``benchmarks/rollout_throughput.py`` writes
-``BENCH_rollout.json`` (periods/sec + speedup for the batched rollout
-pipeline and for scan-fused vs host-loop MAGMA).
+cell — ``--fleets`` selects the platforms) and
+``benchmarks/rollout_throughput.py`` writes ``BENCH_rollout.json``
+(periods/sec + speedup for the batched rollout pipeline, scan-fused vs
+host-loop MAGMA, the fused trainer, and small-vs-large fleet scaling).
 """
 from __future__ import annotations
 
@@ -33,6 +35,9 @@ def main(argv=None):
                          "straggler,roofline,sweep")
     ap.add_argument("--no-magma", action="store_true",
                     help="skip the GA baseline (slowest bench)")
+    ap.add_argument("--fleets", default=None,
+                    help="comma list of fleet presets for the sweep "
+                         "entry (repro.costmodel.fleets; default paper6)")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -62,7 +67,9 @@ def main(argv=None):
         from benchmarks import sweep
         pols = tuple(p for p in sweep.POLICIES
                      if p != "magma" or not args.no_magma)
-        results["sweep"] = sweep.run(quick=quick, policies=pols)["summary"]
+        fleets = tuple(args.fleets.split(",")) if args.fleets else ("paper6",)
+        results["sweep"] = sweep.run(quick=quick, policies=pols,
+                                     fleets=fleets)["summary"]
     if want("straggler"):
         from benchmarks import straggler_bench
         results["straggler"] = straggler_bench.run(quick=quick)["drop"]

@@ -1,12 +1,14 @@
-"""Scenario-sweep harness: arrival presets x schedulers x bandwidths.
+"""Scenario-sweep harness: fleets x arrival presets x schedulers x bandwidths.
 
 Sweeps the full evaluation grid the batched pipeline unlocks —
-``{default, steady, burst, diurnal, heavy_tail}`` arrival scenarios
-x ``{fcfs, prema, herald, magma, relmas}`` x shared-DRAM bandwidths —
-with ONE jitted evaluator call per cell.  Scenario presets only change
-the host-side trace data (``arrivals=`` override), so each compiled
-(env, policy) evaluator is reused across every scenario cell; MAGMA
-runs its whole per-period genetic search inside the episode scan
+accelerator-fleet presets (``repro.costmodel.fleets``) x ``{default,
+steady, burst, diurnal, heavy_tail}`` arrival scenarios x ``{fcfs,
+prema, herald, magma, relmas}`` x shared-DRAM bandwidths — with ONE
+jitted evaluator call per cell.  Scenario presets only change the
+host-side trace data (``arrivals=`` override), so each compiled
+(env, policy) evaluator is reused across every scenario cell and only a
+*fleet* (or bandwidth/env-shape) change recompiles; MAGMA runs its
+whole per-period genetic search inside the episode scan
 (``repro.core.baselines.magma_search_scan``), batched over seeds like
 any other policy.
 
@@ -15,10 +17,12 @@ Usage:
   PYTHONPATH=src python -m benchmarks.sweep --full      # paper-sized
   PYTHONPATH=src python -m benchmarks.sweep --smoke     # tiny (scripts/ci.sh)
   PYTHONPATH=src python -m benchmarks.sweep --bandwidths 16,8,4
+  PYTHONPATH=src python -m benchmarks.sweep --fleets paper6,8simba,8eyeriss
 
 Output: one ``sweep,...`` CSV-ish line per cell + ``BENCH_sweep.json``
-(per-cell sla_rate / energy / wall seconds + grid metadata) for
-regression tracking across PRs.
+(cells keyed ``<fleet>/<scenario>/<policy>/bw<B>`` with sla_rate /
+energy / wall seconds + grid metadata — schema in docs/BENCHMARKS.md)
+for regression tracking across PRs.
 """
 from __future__ import annotations
 
@@ -31,7 +35,9 @@ import time
 from benchmarks.common import (EVAL_LOAD, EVAL_QOS_FACTOR, REPO, eval_policy,
                                make_env)
 from repro.core import baselines as BL
+from repro.costmodel.fleets import fleet_names
 from repro.sim.arrivals import SCENARIOS
+from repro.workloads import build_registry
 
 POLICIES = ("fcfs", "prema", "herald", "magma", "relmas")
 
@@ -45,7 +51,7 @@ SIZES = {
 
 def run(*, quick: bool = True, smoke: bool = False, workload: str = "light",
         scenarios=SCENARIOS, policies=POLICIES, bandwidths=(16.0,),
-        magma_cfg: BL.MagmaConfig | None = None,
+        fleets=("paper6",), magma_cfg: BL.MagmaConfig | None = None,
         out: str | None = None) -> dict:
     size = "smoke" if smoke else ("quick" if quick else "full")
     periods, max_rq, max_jobs, n_seeds, pop, gens = SIZES[size]
@@ -56,35 +62,51 @@ def run(*, quick: bool = True, smoke: bool = False, workload: str = "light",
 
     cells: dict[str, dict] = {}
     t_all = time.time()
-    for bw in bandwidths:
-        # one env (and thus one compiled evaluator per policy) per
-        # bandwidth; scenarios below reuse it — trace data only
-        env = make_env(workload, bandwidth=bw, periods=periods,
-                       max_rq=max_rq, max_jobs=max_jobs, load=EVAL_LOAD,
-                       qos_factor=EVAL_QOS_FACTOR)
-        for sc in scenarios:
-            arr = dataclasses.replace(env.arrivals, scenario=sc)
-            for p in policies:
-                t0 = time.time()
-                m = eval_policy(env, p, workload=workload, seeds=seeds,
-                                magma_cfg=mcfg, arrivals=arr)
-                cell = dict(sla_rate=round(m["sla_rate"], 4),
-                            energy_uj=round(m["energy_uj"], 1),
-                            wall_s=round(time.time() - t0, 2))
-                cells[f"{sc}/{p}/bw{bw:g}"] = cell
-                print(f"sweep,{sc},{p},bw={bw:g},"
-                      f"sla={cell['sla_rate']},wall={cell['wall_s']}",
-                      flush=True)
+    for fl in fleets:
+        # characterize the workload once per fleet (tables don't depend
+        # on the shared bandwidth the inner loop sweeps)
+        reg = build_registry(workload, mas=fl)
+        for bw in bandwidths:
+            # one env (and thus one compiled evaluator per policy) per
+            # (fleet, bandwidth) — num_sas changes the compiled shapes;
+            # scenarios below reuse it, trace data only.  bw 0 = the
+            # fleet's own dram_gbps (e.g. for the datacenter preset).
+            env = make_env(workload, fleet=fl, registry=reg, bandwidth=bw,
+                           periods=periods, max_rq=max_rq,
+                           max_jobs=max_jobs, load=EVAL_LOAD,
+                           qos_factor=EVAL_QOS_FACTOR)
+            for sc in scenarios:
+                arr = dataclasses.replace(env.arrivals, scenario=sc)
+                for p in policies:
+                    t0 = time.time()
+                    m = eval_policy(env, p, workload=workload, seeds=seeds,
+                                    magma_cfg=mcfg, arrivals=arr)
+                    cell = dict(sla_rate=round(m["sla_rate"], 4),
+                                energy_uj=round(m["energy_uj"], 1),
+                                wall_s=round(time.time() - t0, 2))
+                    if "trained" in m:
+                        # no checkpoint matches this fleet's policy dims
+                        # -> the relmas cell is a RANDOM-INIT policy;
+                        # record that so the artifact stays honest
+                        cell["trained"] = bool(m["trained"])
+                    cells[f"{fl}/{sc}/{p}/bw{bw:g}"] = cell
+                    print(f"sweep,{fl},{sc},{p},bw={bw:g},"
+                          f"sla={cell['sla_rate']},wall={cell['wall_s']}",
+                          flush=True)
 
     best = {}
-    for bw in bandwidths:
-        for sc in scenarios:
-            row = {p: cells[f"{sc}/{p}/bw{bw:g}"]["sla_rate"]
-                   for p in policies}
-            key = sc if len(bandwidths) == 1 else f"{sc}/bw{bw:g}"
-            best[key] = max(row, key=row.get)
+    for fl in fleets:
+        for bw in bandwidths:
+            for sc in scenarios:
+                row = {p: cells[f"{fl}/{sc}/{p}/bw{bw:g}"]["sla_rate"]
+                       for p in policies}
+                key = sc if len(fleets) == 1 else f"{fl}/{sc}"
+                if len(bandwidths) > 1:
+                    key = f"{key}/bw{bw:g}"
+                best[key] = max(row, key=row.get)
     summary = {
-        "grid": f"{len(scenarios)}x{len(policies)}x{len(bandwidths)}",
+        "grid": f"{len(fleets)}x{len(scenarios)}x{len(policies)}"
+                f"x{len(bandwidths)}",
         "best_policy_per_scenario": best,
         "wall_s": round(time.time() - t_all, 1),
     }
@@ -93,8 +115,8 @@ def run(*, quick: bool = True, smoke: bool = False, workload: str = "light",
                   max_rq=max_rq, max_jobs=max_jobs, seeds=len(list(seeds)),
                   magma_population=mcfg.population,
                   magma_generations=mcfg.generations,
-                  scenarios=list(scenarios), policies=list(policies),
-                  bandwidths=list(bandwidths)),
+                  fleets=list(fleets), scenarios=list(scenarios),
+                  policies=list(policies), bandwidths=list(bandwidths)),
         cells=cells, summary=summary)
     out = out or os.path.join(REPO, "BENCH_sweep.json")
     with open(out, "w") as f:
@@ -116,7 +138,10 @@ def main(argv=None):
     ap.add_argument("--policies", default=None,
                     help=f"comma list of {POLICIES}")
     ap.add_argument("--bandwidths", default="16",
-                    help="comma list of shared-DRAM GB/s values")
+                    help="comma list of shared-DRAM GB/s values "
+                         "(0 = each fleet's own dram_gbps)")
+    ap.add_argument("--fleets", default="paper6",
+                    help=f"comma list of fleet presets {fleet_names()}")
     ap.add_argument("--population", type=int, default=None,
                     help="MAGMA population override")
     ap.add_argument("--generations", type=int, default=None,
@@ -135,7 +160,7 @@ def main(argv=None):
         policies=tuple(args.policies.split(","))
         if args.policies else POLICIES,
         bandwidths=tuple(float(b) for b in args.bandwidths.split(",")),
-        magma_cfg=mcfg, out=args.out)
+        fleets=tuple(args.fleets.split(",")), magma_cfg=mcfg, out=args.out)
 
 
 if __name__ == "__main__":

@@ -16,15 +16,21 @@ from repro.core import policy as P
 from repro.core.replay import ReplayBuffer
 from repro.core.rollout import (make_baseline_period, make_policy_period,
                                 run_episode)
+from repro.costmodel.fleets import get_fleet
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.env import EnvConfig, SchedulingEnv
 from repro.workloads import build_registry
 
-# 1. registration phase: latency/bandwidth/energy tables (paper Sec. 3)
-registry = build_registry("light")          # SqueezeNet, YOLO-Lite, KWS
+# 1. registration phase: characterize the tenants on an accelerator
+#    fleet (paper Sec. 3).  Fleets are named presets — swap "paper6"
+#    for "8simba", "big_little", ... (repro.costmodel.fleets) and the
+#    whole stack below re-shapes to the new platform.
+fleet = get_fleet("paper6")
+print("fleet:", fleet.describe())
+registry = build_registry("light", mas=fleet)   # SqueezeNet, YOLO-Lite, KWS
 print("tenants:", registry.model_names)
 
-# 2. environment: 6-SA heterogeneous MAS + Pareto arrivals (Sec. 5)
+# 2. environment: the heterogeneous MAS + Pareto arrivals (Sec. 5)
 ecfg = EnvConfig(periods=16, max_rq=32, max_jobs=16)
 env = SchedulingEnv(registry, ecfg,
                     ArrivalConfig(max_jobs=16, horizon_us=ecfg.horizon_us,

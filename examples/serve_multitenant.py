@@ -31,8 +31,8 @@ from repro.workloads import build_llm_registry
 # ---------------------------------------------------------------- control
 print("=== control plane: RELMAS over LM tenants on the simulated MAS ===")
 registry = build_llm_registry("lm_light", phase="decode")
-ecfg = EnvConfig(t_s_us=2000.0, periods=24, max_rq=48, max_jobs=24,
-                 bandwidth_gbps=registry.mas.dram_gbps)
+# bandwidth_gbps left at 0: the env takes the fleet's dram_gbps
+ecfg = EnvConfig(t_s_us=2000.0, periods=24, max_rq=48, max_jobs=24)
 arr = ArrivalConfig(max_jobs=24, load=0.8, horizon_us=ecfg.horizon_us,
                     slack_us=2 * ecfg.t_s_us)
 ckpt = os.path.join("runs", "light_medium", "best")

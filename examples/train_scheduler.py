@@ -1,7 +1,8 @@
 """Train the RELMAS scheduler (DDPG) on the Light workload — a reduced
-version of the EXPERIMENTS.md runs that finishes in a few minutes on CPU.
+version of the full training runs that finishes in a few minutes on CPU.
 
 Run:  PYTHONPATH=src python examples/train_scheduler.py [--episodes 40]
+      [--fleet 8simba]   # train a per-fleet agent (costmodel.fleets)
 
 The driver is fault-tolerant: kill it mid-run and rerun the same
 command — it resumes from the latest checkpoint.
@@ -14,9 +15,11 @@ from repro.launch.rl_train import TrainConfig, train
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--episodes", type=int, default=40)
+    ap.add_argument("--fleet", default="paper6")
     ap.add_argument("--outdir", default="runs/example_scheduler")
     args = ap.parse_args()
-    cfg = TrainConfig(workload="light", episodes=args.episodes,
+    cfg = TrainConfig(workload="light", fleet=args.fleet,
+                      episodes=args.episodes,
                       hidden=32, max_rq=48, max_jobs=24, periods=30,
                       warmup_episodes=3, updates_per_episode=15,
                       eval_every=10, eval_seeds=3, outdir=args.outdir)

@@ -8,15 +8,33 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 CI_TMP="$(mktemp -d "${TMPDIR:-/tmp}/relmas_ci.XXXXXX")"
 trap 'rm -rf "$CI_TMP"' EXIT
 python -m pytest -x -q "$@"
+# README quickstart, run verbatim (keeps the docs honest): the ~60-line
+# end-to-end example; SKIP_QUICKSTART=1 skips it.
+if [ -z "${SKIP_QUICKSTART:-}" ]; then
+  python examples/quickstart.py
+fi
 # smoke scenario sweep: exercises the scan-fused device-resident MAGMA
 # path end-to-end (tiny population/generations, 2 scenarios, ~15s);
 # SKIP_SWEEP=1 skips it.  Output goes to a temp dir, NOT the repo.
 if [ -z "${SKIP_SWEEP:-}" ]; then
   python -m benchmarks.sweep --smoke --out "$CI_TMP/BENCH_sweep_smoke.json"
+  # two-fleet smoke: per-fleet re-characterization + recompile on the
+  # homogeneous-dataflow extremes (fleet cells must both materialize)
+  python -m benchmarks.sweep --smoke --fleets 8simba,8eyeriss \
+    --scenarios default --policies fcfs,relmas \
+    --out "$CI_TMP/BENCH_sweep_fleets_smoke.json"
+  python - "$CI_TMP/BENCH_sweep_fleets_smoke.json" <<'PY'
+import json, sys
+cells = json.load(open(sys.argv[1]))["cells"]
+for k in ("8simba/default/fcfs/bw16", "8eyeriss/default/fcfs/bw16"):
+    assert k in cells, f"missing fleet cell {k}: {sorted(cells)}"
+print(f"fleet sweep smoke: {len(cells)} cells OK")
+PY
 fi
-# fused-trainer smoke: 2 single-dispatch training rounds (device-side
+# fused-trainer smoke: the README quickstart's 2-round training command
+# (verbatim flags; outdir redirected into the CI tempdir) — device-side
 # trace gen -> rollout -> donated ring write -> update scan -> sigma
-# decay) through the real driver at a tiny config; SKIP_TRAIN=1 skips
+# decay through the real driver; SKIP_TRAIN=1 skips
 if [ -z "${SKIP_TRAIN:-}" ]; then
   python -m repro.launch.rl_train --workload light --episodes 4 \
     --batch-episodes 2 --periods 6 --max-rq 16 --max-jobs 8 --hidden 8 \

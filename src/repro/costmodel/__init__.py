@@ -14,12 +14,16 @@ from repro.costmodel.accelerators import (
     SAClass, EYERISS_SMALL, EYERISS_LARGE, SIMBA_SMALL, SIMBA_LARGE,
     DEFAULT_MAS, MASConfig, layer_cost,
 )
+from repro.costmodel.fleets import (
+    FLEETS, DEFAULT_FLEET, FleetConfig, fleet_names, get_fleet,
+)
 from repro.costmodel.layers import LayerSpec, conv2d, dwconv2d, fc, pool, gemm, elementwise
 from repro.costmodel.registry import ModelTable, register_model, Registry
 
 __all__ = [
     "SAClass", "EYERISS_SMALL", "EYERISS_LARGE", "SIMBA_SMALL", "SIMBA_LARGE",
     "DEFAULT_MAS", "MASConfig", "layer_cost",
+    "FLEETS", "DEFAULT_FLEET", "FleetConfig", "fleet_names", "get_fleet",
     "LayerSpec", "conv2d", "dwconv2d", "fc", "pool", "gemm", "elementwise",
     "ModelTable", "register_model", "Registry",
 ]

@@ -12,6 +12,13 @@ transfer per *chunk*, not per round.  Evaluation runs through the
 jitted ``evaluate_batch``.
 
 Knobs:
+- ``--fleet NAME``        accelerator-fleet preset (``paper6``,
+  ``4simba_4eyeriss``, ``8simba``, ``8eyeriss``, ``2simba_6eyeriss``,
+  ``big_little``, ... — see ``repro.costmodel.fleets``): the workload
+  is re-characterized on that platform and the policy's feature/action
+  dims follow its ``num_sas``, so this trains a per-fleet agent;
+  ``--bandwidth-gbps 0`` (the default) uses the fleet's shared DRAM
+  bandwidth;
 - ``--batch-episodes N``  episodes collected per training round;
 - ``--scenario NAME``     arrival-process preset (``default``,
   ``steady``, ``burst``, ``diurnal``, ``heavy_tail`` — see
@@ -64,11 +71,12 @@ from repro.workloads import build_registry
 @dataclasses.dataclass
 class TrainConfig:
     workload: str = "light"
+    fleet: str = "paper6"      # accelerator platform (costmodel.fleets)
     qos_level: str = "medium"
     qos_factor: float = 3.0
     load: float = 0.9
     scenario: str = "default"
-    bandwidth_gbps: float = 16.0
+    bandwidth_gbps: float = 0.0  # 0 = the fleet's dram_gbps
     t_s_us: float = 500.0
     periods: int = 60
     max_rq: int = 96
@@ -98,7 +106,7 @@ class TrainConfig:
 
 
 def build_env(cfg: TrainConfig) -> SchedulingEnv:
-    reg = build_registry(cfg.workload)
+    reg = build_registry(cfg.workload, mas=cfg.fleet)
     ecfg = EnvConfig(t_s_us=cfg.t_s_us, periods=cfg.periods,
                      max_rq=cfg.max_rq, max_jobs=cfg.max_jobs,
                      bandwidth_gbps=cfg.bandwidth_gbps)
@@ -172,7 +180,26 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
     mgr = CheckpointManager(os.path.join(cfg.outdir, "ckpt"))
     start_ep = 0
     if (step := mgr.latest_step()) is not None:      # auto-resume
-        state, step, meta = mgr.restore(state, step)
+        try:
+            state, step, meta = mgr.restore(state, step)
+        except ValueError as e:
+            # policy shapes follow --hidden and the fleet's num_sas
+            # (feat/act dims) — a resume with either changed lands here
+            raise ValueError(
+                f"checkpoint in {cfg.outdir} does not match this run's "
+                f"policy shapes — resume with the --hidden/--fleet it "
+                f"was trained with (this run: --hidden {cfg.hidden} "
+                f"--fleet {cfg.fleet}) or use a fresh --outdir [{e}]"
+                ) from None
+        # pre-fleet-era checkpoints (no meta key) were all paper6 runs
+        ck_fleet = meta.get("fleet", "paper6")
+        if ck_fleet != cfg.fleet:
+            # same-width fleets restore cleanly but are different
+            # platforms — refuse to silently continue cross-fleet
+            raise ValueError(
+                f"checkpoint in {cfg.outdir} was trained on fleet "
+                f"{ck_fleet!r} but --fleet is {cfg.fleet!r}; use a fresh "
+                f"--outdir to train a {cfg.fleet!r} agent")
         start_ep = meta.get("episode", 0) + 1
         log_fn(f"[resume] restored checkpoint at episode {start_ep - 1}")
 
@@ -277,21 +304,39 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                     os.path.join(cfg.outdir, "best"), keep=1)
                 mgr_best.save(ep, state.actor,
                               dict(episode=ep, sla=ev["sla_rate"],
-                                   hidden=cfg.hidden,
+                                   hidden=cfg.hidden, fleet=cfg.fleet,
                                    feat_dim=env.feat_dim,
                                    act_dim=env.act_dim))
         if chunk["ckpt"]:
-            mgr.save(ep, state, dict(episode=ep))
+            mgr.save(ep, state, dict(episode=ep, fleet=cfg.fleet))
     logf.close()
     return dict(best=best, history=history, env=env, pcfg=pcfg, state=state,
                 baselines=baseline_scores)
 
 
+_HELP = {
+    "workload": "tenant set: light | heavy | mixed (workloads.cnn_zoo)",
+    "fleet": "accelerator-fleet preset (repro.costmodel.fleets): paper6, "
+             "4simba_4eyeriss, 8simba, 8eyeriss, 2simba_6eyeriss, "
+             "big_little, ...; trains a per-fleet agent",
+    "bandwidth_gbps": "shared DRAM GB/s; 0 = the fleet's dram_gbps",
+    "scenario": "arrival preset: default | steady | burst | diurnal | "
+                "heavy_tail (sim.arrivals)",
+    "batch_episodes": "episodes collected per fused training round",
+    "eval_baselines": 'comma list scored on the eval seeds before '
+                      'training, e.g. "fcfs,herald,magma" ("" = skip)',
+    "fail_at": "inject a crash at this episode (fault-tolerance tests)",
+}
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="RELMAS DDPG training driver (single-dispatch fused "
+                    "rounds; see module docstring / docs/ARCHITECTURE.md)",
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter)
     for f in dataclasses.fields(TrainConfig):
         ap.add_argument(f"--{f.name.replace('_', '-')}", type=type(f.default),
-                        default=f.default)
+                        default=f.default, help=_HELP.get(f.name, " "))
     args = ap.parse_args(argv)
     cfg = TrainConfig(**vars(args))
     print(f"RELMAS DDPG training: {cfg}")

@@ -27,17 +27,18 @@ from repro.workloads import build_registry, build_llm_registry, \
 
 def build_service(args) -> MultiTenantService:
     if args.workload in LM_WORKLOADS:
-        registry = build_llm_registry(args.workload, phase=args.phase,
-                                      seq=args.seq)
+        registry = build_llm_registry(
+            args.workload, phase=args.phase, seq=args.seq,
+            mas=args.fleet or "datacenter")
         t_s = 2000.0                      # LM layer latencies are larger
     else:
-        registry = build_registry(args.workload)
+        registry = build_registry(args.workload, mas=args.fleet or "paper6")
         t_s = 500.0
+    # bandwidth <= 0 -> SchedulingEnv resolves the fleet's dram_gbps
     ecfg = EnvConfig(t_s_us=args.t_s if args.t_s > 0 else t_s,
                      periods=args.periods, max_rq=args.max_rq,
                      max_jobs=args.max_jobs,
-                     bandwidth_gbps=args.bandwidth
-                     if args.bandwidth > 0 else registry.mas.dram_gbps)
+                     bandwidth_gbps=args.bandwidth)
     arr = ArrivalConfig(max_jobs=args.max_jobs, load=args.load,
                         qos_factor=args.qos_factor, qos_level=args.qos,
                         horizon_us=ecfg.horizon_us, slack_us=2 * ecfg.t_s_us)
@@ -60,7 +61,12 @@ def main(argv=None):
                     choices=["high", "medium", "low"])
     ap.add_argument("--qos-factor", type=float, default=3.0)
     ap.add_argument("--load", type=float, default=0.9)
-    ap.add_argument("--bandwidth", type=float, default=-1.0)
+    ap.add_argument("--bandwidth", type=float, default=-1.0,
+                    help="shared DRAM GB/s (<=0: fleet default)")
+    ap.add_argument("--fleet", default=None,
+                    help="accelerator fleet preset "
+                         "(repro.costmodel.fleets; default: paper6, "
+                         "or datacenter for lm_* workloads)")
     ap.add_argument("--t-s", type=float, default=-1.0)
     ap.add_argument("--max-rq", type=int, default=96)
     ap.add_argument("--max-jobs", type=int, default=64)

@@ -51,7 +51,19 @@ class MultiTenantService:
             params = P.init_actor(jax.random.PRNGKey(0), pcfg)
             if ckpt_dir and os.path.isdir(ckpt_dir):
                 try:
-                    params, _, _ = restore_checkpoint(ckpt_dir, params)
+                    restored, _, meta = restore_checkpoint(ckpt_dir, params)
+                    # same-width fleets restore shape-clean but carry
+                    # another platform's policy — only accept a fleet
+                    # match when both sides are named (checkpoints from
+                    # before the fleet axis carry no meta["fleet"])
+                    ck_fleet = meta.get("fleet")
+                    fleet = getattr(registry.mas, "name", None)
+                    if ck_fleet and fleet and ck_fleet != fleet:
+                        print(f"[service] checkpoint trained on fleet "
+                              f"{ck_fleet!r}, serving {fleet!r}; "
+                              f"using untrained policy")
+                    else:
+                        params = restored
                 except (ValueError, KeyError, FileNotFoundError) as e:
                     # checkpoint trained for a different MAS shape (M
                     # changes feat/act dims) — serve with a fresh policy

@@ -49,7 +49,9 @@ class EnvConfig:
     periods: int = 60            # episode length (last ~40% drains arrivals)
     max_rq: int = 96             # R: RQ slot capacity presented to the policy
     max_jobs: int = 64           # J
-    bandwidth_gbps: float = 16.0 # shared DRAM bandwidth (fig.4 sweeps this)
+    # shared DRAM bandwidth (fig.4 sweeps this); 0 = take the fleet's
+    # dram_gbps from the registry's MASConfig (repro.costmodel.fleets)
+    bandwidth_gbps: float = 0.0
     # reward coefficients (paper Sec. 5)
     alpha: float = 0.10
     beta: float = 0.11
@@ -68,6 +70,9 @@ class SchedulingEnv:
 
     def __init__(self, registry: Registry, cfg: EnvConfig,
                  arrivals: ArrivalConfig | None = None):
+        if cfg.bandwidth_gbps <= 0:  # resolve "fleet default" once, here
+            cfg = dataclasses.replace(cfg,
+                                      bandwidth_gbps=registry.mas.dram_gbps)
         self.cfg = cfg
         self.registry = registry
         d = registry.dense()

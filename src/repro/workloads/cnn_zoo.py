@@ -13,6 +13,7 @@ original publications.
 from __future__ import annotations
 
 from repro.costmodel.accelerators import MASConfig, DEFAULT_MAS
+from repro.costmodel.fleets import get_fleet
 from repro.costmodel.layers import LayerSpec, conv2d, dwconv2d, fc, pool
 from repro.costmodel.registry import Registry
 
@@ -192,8 +193,12 @@ WORKLOADS = {"light": LIGHT_MODELS, "heavy": HEAVY_MODELS, "mixed": MIXED_MODELS
 
 
 def build_registry(workload: str = "mixed",
-                   mas: MASConfig = DEFAULT_MAS) -> Registry:
-    reg = Registry(mas)
+                   mas: MASConfig | str = DEFAULT_MAS) -> Registry:
+    """Characterize a workload on a MAS (``mas`` may be a fleet preset
+    name — see ``repro.costmodel.fleets``): the registration phase,
+    re-run per fleet so the ``c[i,s,m]`` / ``b[i,s,m]`` tables match
+    the platform the scheduler targets."""
+    reg = Registry(get_fleet(mas))
     for name, fn in WORKLOADS[workload].items():
         reg.register(name, fn())
     return reg

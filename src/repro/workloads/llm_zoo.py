@@ -24,6 +24,7 @@ from __future__ import annotations
 from repro.configs.base import ArchConfig
 from repro.configs.registry import ARCHS
 from repro.costmodel.accelerators import DATACENTER_MAS, MASConfig
+from repro.costmodel.fleets import get_fleet
 from repro.costmodel.layers import LayerSpec, elementwise, gemm
 from repro.costmodel.registry import Registry
 
@@ -122,8 +123,10 @@ LM_WORKLOADS = {
 def build_llm_registry(workload: str = "lm_mixed", *,
                        phase: str = "decode", seq: int = 128,
                        ctx: int = 2048,
-                       mas: MASConfig = DATACENTER_MAS) -> Registry:
-    reg = Registry(mas)
+                       mas: MASConfig | str = DATACENTER_MAS) -> Registry:
+    """LM tenants on an HBM-class MAS; ``mas`` accepts fleet preset names
+    (see ``repro.costmodel.fleets``) like :func:`build_registry`."""
+    reg = Registry(get_fleet(mas))
     for name in LM_WORKLOADS[workload]:
         reg.register(name, llm_layer_specs(ARCHS[name], phase=phase,
                                            seq=seq, ctx=ctx))
