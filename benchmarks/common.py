@@ -17,6 +17,8 @@ from repro.ckpt import restore_checkpoint
 from repro.core import baselines as BL
 from repro.costmodel import DEFAULT_MAS
 from repro.core import policy as P
+from repro.core.generalist import (PaddedEnv, evaluate_generalist_batch,
+                                   load_generalist_checkpoint)
 from repro.core.rollout import (evaluate_batch, evaluate_batch_baseline,
                                 run_episode)
 from repro.sim.arrivals import ArrivalConfig
@@ -43,6 +45,13 @@ def _ckpt(w: str) -> str:
 
 
 CKPTS = {w: _ckpt(w) for w in ("light", "heavy", "mixed")}
+
+# fleet-conditioned generalist checkpoints (launch/rl_train.py
+# --fleet a,b,c / --policy-kind generalist): ONE per workload serves
+# every fleet whose num_sas fits the recorded m_max — the relmas
+# fallback when no specialist checkpoint matches the evaluated fleet
+GENERALIST_CKPTS = {w: os.path.join(RUNS, f"{w}_generalist", "best")
+                    for w in ("light", "heavy", "mixed")}
 
 
 def make_env(workload: str, *, qos: str = "medium", qos_factor: float = 3.0,
@@ -90,8 +99,17 @@ def _fleet_id(mas):
 
 
 def load_relmas(env: SchedulingEnv, workload: str, hidden: int = 64):
-    # memoised per (workload, dims, fleet): sweep grids evaluate the
-    # same checkpoint once per scenario/bandwidth cell otherwise
+    """-> (params, pcfg, info) for the best available RELMAS policy.
+
+    ``info`` is ``dict(trained, policy_kind, spec)``: a fleet-matched
+    *specialist* checkpoint wins; otherwise a *generalist* checkpoint
+    (``GENERALIST_CKPTS``) restores on any fleet whose ``num_sas`` fits
+    its ``m_max`` (``policy_kind: "generalist"``, ``spec`` set — the
+    caller evaluates through the padded env); else an untrained
+    specialist-shaped policy (``trained: False``).  Memoised per
+    (workload, dims, fleet): sweep grids evaluate the same checkpoint
+    once per scenario/bandwidth cell otherwise.
+    """
     fleet = _fleet_id(env.registry.mas)
     ckey = (workload, hidden, env.feat_dim, env.act_dim, fleet)
     if ckey in _RELMAS_CACHE:
@@ -99,21 +117,41 @@ def load_relmas(env: SchedulingEnv, workload: str, hidden: int = 64):
     pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
                           hidden=hidden)
     params = P.init_actor(jax.random.PRNGKey(0), pcfg)
+    info = dict(trained=False, policy_kind="specialist", spec=None)
     ck = CKPTS.get(workload)
-    trained = False
     if ck and os.path.isdir(ck):
         try:
             restored, _, meta = restore_checkpoint(ck, params)
-            # checkpoints are platform-specific: a same-width fleet
-            # restores shape-clean but carries another platform's
+            # specialist checkpoints are platform-specific: a same-width
+            # fleet restores shape-clean but carries another platform's
             # policy — only accept a fleet match (pre-fleet-era
             # checkpoints were all trained on paper6)
             if meta.get("fleet", "paper6") == fleet:
-                params, trained = restored, True
+                params, info["trained"] = restored, True
         except (KeyError, ValueError, FileNotFoundError):
             pass
-    _RELMAS_CACHE[ckey] = (params, pcfg, trained)
-    return params, pcfg, trained
+    if not info["trained"]:
+        gen = load_generalist_checkpoint(GENERALIST_CKPTS.get(workload),
+                                         min_num_sas=env.num_sas,
+                                         default_hidden=hidden)
+        if gen is not None and gen[3]:        # restored weights only
+            params, pcfg, spec, _ = gen
+            info = dict(trained=True, policy_kind="generalist", spec=spec)
+    _RELMAS_CACHE[ckey] = (params, pcfg, info)
+    return params, pcfg, info
+
+
+def padded_env_for(env: SchedulingEnv, m_max: int) -> PaddedEnv:
+    """The ``m_max``-padded twin of an env (for generalist evaluation),
+    cached on the env so repeated sweep cells reuse one compiled
+    evaluator."""
+    cache = getattr(env, "_padded_twins", None)
+    if cache is None:
+        cache = env._padded_twins = {}
+    if m_max not in cache:
+        cache[m_max] = PaddedEnv(env.registry, env.cfg, m_max,
+                                 env.arrivals)
+    return cache[m_max]
 
 
 # CI-sized default for the GA baseline (paper settings are 100 x 100 —
@@ -135,9 +173,15 @@ def eval_policy(env: SchedulingEnv, name: str, *, workload: str,
     old per-period host loop (the throughput benchmark's "before" arm).
     """
     if name == "relmas":
-        params, pcfg, trained = load_relmas(env, workload)
-        res = evaluate_batch(env, pcfg, params, seeds, arrivals)
-        res["trained"] = trained
+        params, pcfg, info = load_relmas(env, workload)
+        if info["policy_kind"] == "generalist":
+            res = evaluate_generalist_batch(
+                padded_env_for(env, info["spec"].m_max), pcfg, params,
+                seeds, arrivals)
+        else:
+            res = evaluate_batch(env, pcfg, params, seeds, arrivals)
+        res["trained"] = info["trained"]
+        res["policy_kind"] = info["policy_kind"]
         return res
     if name == "magma":
         mcfg = magma_cfg or MAGMA_BENCH_CFG
@@ -153,10 +197,16 @@ def eval_policy(env: SchedulingEnv, name: str, *, workload: str,
                                    arrivals=arrivals)
                 for k, v in m.items():
                     out.setdefault(k, []).append(v)
-            return {k: float(np.mean(v)) for k, v in out.items()}
-        return evaluate_batch_baseline(env, BL.make_magma_baseline(mcfg),
-                                       seeds, arrivals)
-    return evaluate_batch_baseline(env, BL.BASELINES[name], seeds, arrivals)
+            res = {k: float(np.mean(v)) for k, v in out.items()}
+            res["policy_kind"] = "heuristic"
+            return res
+        res = evaluate_batch_baseline(env, BL.make_magma_baseline(mcfg),
+                                      seeds, arrivals)
+    else:
+        res = evaluate_batch_baseline(env, BL.BASELINES[name], seeds,
+                                      arrivals)
+    res["policy_kind"] = "heuristic"
+    return res
 
 
 def geomean_improvement(a: list[float], b: list[float]) -> float:

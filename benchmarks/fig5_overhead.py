@@ -19,7 +19,8 @@ import json
 import jax
 import numpy as np
 
-from benchmarks.common import load_relmas, make_env
+from benchmarks.common import load_relmas, make_env, padded_env_for
+from repro.core.generalist import make_generalist_period
 from repro.core.policy import PolicyConfig, actor_macs_per_timestep
 from repro.core.rollout import make_policy_period, run_episode
 from repro.costmodel.accelerators import (E_DRAM_PJ_PER_BYTE,
@@ -48,8 +49,14 @@ def run(*, quick: bool = True) -> dict:
     for t_s in PERIODS_US:
         periods = int(HORIZON_US / t_s / 0.6)        # fixed horizon
         env = make_env("mixed", t_s_us=t_s, periods=periods)
-        params, pcfg, _ = load_relmas(env, "mixed")
-        period_fn = make_policy_period(env, pcfg)
+        params, pcfg, info = load_relmas(env, "mixed")
+        if info["policy_kind"] == "generalist":
+            # generalist fallback checkpoint: its pcfg is padded +
+            # descriptor-conditioned, so run through the padded env
+            env = padded_env_for(env, info["spec"].m_max)
+            period_fn = make_generalist_period(env, pcfg)
+        else:
+            period_fn = make_policy_period(env, pcfg)
         occ, wl_uj = [], []
         for s in (7200, 7201) if quick else (7200, 7201, 7202, 7203):
             m, trans = run_episode(env, period_fn,

@@ -3,7 +3,8 @@
   python -m benchmarks.run            # quick CI-sized pass (default)
   python -m benchmarks.run --full     # paper-sized episode counts
   python -m benchmarks.run --only fig3,roofline
-  python -m benchmarks.run --only sweep   # scenario x policy x bw grid
+  python -m benchmarks.run --only sweep     # scenario x policy x bw grid
+  python -m benchmarks.run --only transfer  # cross-fleet transfer matrix
 
 Output: CSV-ish lines per benchmark (stable prefixes: fig3, fig4, fig5,
 table1, table2 — both emitted by the table1 entry — policy_latency,
@@ -18,7 +19,11 @@ writes ``BENCH_sweep.json`` (per-cell SLA rates for fleet presets x
 cell — ``--fleets`` selects the platforms) and
 ``benchmarks/rollout_throughput.py`` writes ``BENCH_rollout.json``
 (periods/sec + speedup for the batched rollout pipeline, scan-fused vs
-host-loop MAGMA, the fused trainer, and small-vs-large fleet scaling).
+host-loop MAGMA, the fused trainer, and small-vs-large fleet scaling);
+``benchmarks/transfer.py`` writes ``BENCH_transfer.json`` (the
+fleets x fleets cross-fleet transfer matrix: generalist vs per-fleet
+specialist vs untrained, all policies trained in-suite — ``--fleets``
+selects the platforms).
 """
 from __future__ import annotations
 
@@ -32,12 +37,13 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig4,fig5,table1,policy,"
-                         "straggler,roofline,sweep")
+                         "straggler,roofline,sweep,transfer")
     ap.add_argument("--no-magma", action="store_true",
                     help="skip the GA baseline (slowest bench)")
     ap.add_argument("--fleets", default=None,
-                    help="comma list of fleet presets for the sweep "
-                         "entry (repro.costmodel.fleets; default paper6)")
+                    help="comma list of fleet presets for the sweep/"
+                         "transfer entries (repro.costmodel.fleets; "
+                         "defaults: paper6 / paper6,8simba,8eyeriss)")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -70,6 +76,14 @@ def main(argv=None):
         fleets = tuple(args.fleets.split(",")) if args.fleets else ("paper6",)
         results["sweep"] = sweep.run(quick=quick, policies=pols,
                                      fleets=fleets)["summary"]
+    if only is not None and "transfer" in only:
+        # opt-in only (--only transfer): trains len(fleets)+1 policies
+        # in-suite, far heavier than the eval-only entries above
+        from benchmarks import transfer
+        fleets = (tuple(args.fleets.split(",")) if args.fleets
+                  else transfer.DEFAULT_FLEETS)
+        results["transfer"] = transfer.run(quick=quick,
+                                           fleets=fleets)["summary"]
     if want("straggler"):
         from benchmarks import straggler_bench
         results["straggler"] = straggler_bench.run(quick=quick)["drop"]

@@ -84,6 +84,11 @@ def run(*, quick: bool = True, smoke: bool = False, workload: str = "light",
                     cell = dict(sla_rate=round(m["sla_rate"], 4),
                                 energy_uj=round(m["energy_uj"], 1),
                                 wall_s=round(time.time() - t0, 2))
+                    if "policy_kind" in m:
+                        # heuristic | specialist | generalist — lets one
+                        # BENCH_sweep.json mix per-fleet and
+                        # fleet-conditioned relmas rows unambiguously
+                        cell["policy_kind"] = m["policy_kind"]
                     if "trained" in m:
                         # no checkpoint matches this fleet's policy dims
                         # -> the relmas cell is a RANDOM-INIT policy;

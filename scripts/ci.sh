@@ -42,6 +42,32 @@ if [ -z "${SKIP_TRAIN:-}" ]; then
     --warmup-episodes 2 --eval-every 100 --eval-seeds 2 \
     --outdir "$CI_TMP/relmas_smoke"
 fi
+# generalist smokes: (1) a 2-fleet --fleet training run (2 fused
+# fleet-sampling rounds: descriptor-conditioned policy, stacked fleet
+# tensors bound per round, M-agnostic replay) and (2) a 2x2 transfer
+# matrix (trains 3 tiny policies in-suite) with a cell-presence check;
+# SKIP_GENERALIST=1 skips both.  Outputs go to the CI tempdir.
+if [ -z "${SKIP_GENERALIST:-}" ]; then
+  python -m repro.launch.rl_train --workload light --fleet paper6,8simba \
+    --episodes 4 --batch-episodes 2 --periods 6 --max-rq 16 --max-jobs 8 \
+    --hidden 8 --updates-per-episode 2 --batch-size 8 \
+    --replay-capacity 64 --warmup-episodes 2 --eval-every 100 \
+    --eval-seeds 2 --outdir "$CI_TMP/generalist_smoke"
+  python -m benchmarks.transfer --smoke \
+    --out "$CI_TMP/BENCH_transfer_smoke.json"
+  python - "$CI_TMP/BENCH_transfer_smoke.json" <<'PY'
+import json, sys
+res = json.load(open(sys.argv[1]))
+cells = res["cells"]
+for row in ("generalist", "specialist:paper6", "specialist:8simba",
+            "untrained"):
+    for f in ("paper6", "8simba"):
+        assert f"{row}/{f}" in cells, \
+            f"missing transfer cell {row}/{f}: {sorted(cells)}"
+assert "generalist_beats_untrained" in res["summary"]
+print(f"transfer smoke: {len(cells)} cells OK")
+PY
+fi
 # bench regression guard: fresh train_throughput must stay within 30%
 # of the committed BENCH_rollout.json.  Absolute rounds/sec is machine-
 # dependent, so a failure requires BOTH the absolute fused rounds/sec

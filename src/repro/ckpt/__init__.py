@@ -1,7 +1,8 @@
 """Checkpointing: atomic save/restore + retention + elastic restore."""
 from repro.ckpt.checkpoint import (
-    save_checkpoint, restore_checkpoint, latest_step, CheckpointManager,
+    save_checkpoint, restore_checkpoint, read_checkpoint_meta, latest_step,
+    CheckpointManager,
 )
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "CheckpointManager"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "read_checkpoint_meta",
+           "latest_step", "CheckpointManager"]

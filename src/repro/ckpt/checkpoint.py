@@ -48,6 +48,23 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def read_checkpoint_meta(directory: str,
+                         step: int | None = None) -> dict | None:
+    """Read just the ``__meta__`` record of a checkpoint (None if the
+    directory holds none).  Lets a consumer decide *how* to restore —
+    e.g. which policy architecture to instantiate (specialist vs
+    fleet-conditioned generalist) — before building the ``like`` tree
+    :func:`restore_checkpoint` needs.
+    """
+    if step is None:
+        step = latest_step(directory)
+    if step is None:
+        return None
+    path = os.path.join(directory, f"ckpt_{step:010d}.npz")
+    with np.load(path, allow_pickle=False) as z:
+        return json.loads(str(z["__meta__"]))
+
+
 def restore_checkpoint(directory: str, like, step: int | None = None):
     """Restore into the structure of ``like``. Returns (tree, step, meta).
 

@@ -112,13 +112,24 @@ def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch) -> tuple["DDPGState", 
 
     batch: dict with s (B,T,F), mask (B,T), a (B,T-1,G), r (B,),
            s2 (B,T,F), mask2 (B,T).
+
+    An optional ``act_mask`` (B, G) entry masks action channels of the
+    *regenerated* actions (target actor's a2 and the actor-loss a) the
+    same way the behaviour policy masked the stored ones — the
+    M-agnostic generalist policy zeroes the allocation channels of
+    ``M_max``-padding SAs so the critic's action input is
+    fleet-invariant (``repro.core.generalist``); absent the key, the
+    update is the plain DDPG step.
     """
     pc = cfg.policy
     bc_actor = jax.vmap(P.actor_apply, in_axes=(None, None, 0, 0))
     bc_critic = jax.vmap(P.critic_apply, in_axes=(None, None, 0, 0, 0))
+    am = batch.get("act_mask")
+    remask = ((lambda a: a * am[:, None, :]) if am is not None
+              else (lambda a: a))
 
     r = batch["r"] * cfg.reward_scale
-    a2 = bc_actor(state.target_actor, pc, batch["s2"], batch["mask2"])
+    a2 = remask(bc_actor(state.target_actor, pc, batch["s2"], batch["mask2"]))
     q2 = bc_critic(state.target_critic, pc, batch["s2"], a2, batch["mask2"])
     y = jax.lax.stop_gradient(r + cfg.gamma * q2)
 
@@ -131,7 +142,7 @@ def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch) -> tuple["DDPGState", 
                                       cfg.critic_lr, state.step, cfg.grad_clip)
 
     def actor_loss(ap):
-        a = bc_actor(ap, pc, batch["s"], batch["mask"])
+        a = remask(bc_actor(ap, pc, batch["s"], batch["mask"]))
         return -jnp.mean(bc_critic(new_critic, pc, batch["s"], a, batch["mask"]))
 
     aloss, agrads = jax.value_and_grad(actor_loss)(state.actor)

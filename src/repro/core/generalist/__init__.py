@@ -1,0 +1,52 @@
+"""Fleet-conditioned generalist policy: ONE checkpoint for every fleet.
+
+The specialist RELMAS nets bake the platform into their shapes
+(``F = 4 + 2M``) and weights; this subsystem removes both couplings:
+
+- ``repro.costmodel.descriptors`` — normalized per-SA hardware
+  descriptors (dataflow, peak MACs, buffers, clock, DRAM share);
+- :mod:`.features` — the M-agnostic feature/action space: pad to
+  ``M_max``, append descriptors to every slot row (and the primer),
+  masked SA allocation + masked action channels;
+- :mod:`.env` — :class:`PaddedEnv` (any fleet at width ``M_max`` with
+  poisoned padding SAs) and stacked fleet tensors for in-trace binding;
+- :mod:`.rollout` — batched device-resident eval/collection runners and
+  the serving-side period step;
+- :mod:`.train` — multi-fleet fused training rounds: each round samples
+  a fleet, gathers its tables by a traced index, and trains through the
+  single-dispatch donated pipeline of ``repro.core.train``.
+
+``benchmarks/transfer.py`` builds the cross-fleet transfer matrix on
+top of this (generalist vs single-fleet specialist vs untrained).
+"""
+from repro.core.generalist.env import (PAD_LAT_US, PaddedEnv,
+                                       build_padded_envs,
+                                       stack_fleet_tables)
+from repro.core.generalist.features import (GeneralistSpec,
+                                            action_channel_mask,
+                                            append_descriptors,
+                                            generalist_act_fn,
+                                            masked_allocation)
+from repro.core.generalist.rollout import (collect_generalist,
+                                           evaluate_generalist_batch,
+                                           load_generalist_checkpoint,
+                                           make_generalist_evaluate_batch,
+                                           make_generalist_period,
+                                           restore_spec)
+from repro.core.generalist.train import (expand_batch,
+                                         generalist_replay_init,
+                                         generalist_update_rounds,
+                                         make_generalist_round,
+                                         make_generalist_rounds)
+
+__all__ = [
+    "PAD_LAT_US", "PaddedEnv", "build_padded_envs", "stack_fleet_tables",
+    "GeneralistSpec", "action_channel_mask", "append_descriptors",
+    "generalist_act_fn", "masked_allocation",
+    "collect_generalist", "evaluate_generalist_batch",
+    "load_generalist_checkpoint",
+    "make_generalist_evaluate_batch", "make_generalist_period",
+    "restore_spec",
+    "expand_batch", "generalist_replay_init", "generalist_update_rounds",
+    "make_generalist_round", "make_generalist_rounds",
+]

@@ -1,0 +1,105 @@
+"""Padded environments: any fleet presented at a fixed width ``M_max``.
+
+:class:`PaddedEnv` is a :class:`~repro.sim.env.SchedulingEnv` whose
+characterization tables are padded along the SA axis to ``M_max``
+columns, so environments built on fleets of different ``num_sas`` share
+one set of compiled shapes (features ``4 + 2*M_max``, actions
+``1 + M_max``).  Padding SAs are *poisoned*, not free: their latency
+column saturates at :data:`PAD_LAT_US` (a bug that routes work to a
+phantom SA shows up as a catastrophic SLA miss, never as silent free
+compute) and the masked allocation of ``repro.core.generalist.features``
+guarantees they are never selected.  SLA budgets come from the real
+(unpadded) registry, so deadlines are identical to the plain env's.
+
+:func:`stack_fleet_tables` stacks the padded tables of several fleets
+into ``(K, ...)`` tensors; combined with
+:meth:`~repro.sim.env.SchedulingEnv.bind_tables` a jitted training
+round gathers one fleet's tables by a **traced** index and runs the
+episode with the platform as data — sampling a fleet per round costs no
+recompilation (``repro.core.generalist.train``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.costmodel.descriptors import fleet_descriptors
+from repro.sim.arrivals import ArrivalConfig
+from repro.sim.env import EnvConfig, SchedulingEnv
+from repro.workloads import build_registry
+
+# latency of a padding SA: large enough that any accidental selection
+# is an unmissable SLA catastrophe, small enough to stay finite through
+# the engine's float32 arithmetic (INF/2 guards sit at ~5e29)
+PAD_LAT_US = 1.0e7
+
+
+class PaddedEnv(SchedulingEnv):
+    """SchedulingEnv at width ``m_max`` with SA-axis-padded tables.
+
+    ``true_num_sas`` keeps the fleet's real width; ``sa_mask`` /
+    ``descriptors`` are the validity mask and hardware-descriptor table
+    the generalist policy consumes.  At ``m_max == num_sas`` this IS
+    the plain env (zero padding, identical tables) plus the descriptor
+    attributes.
+    """
+
+    def __init__(self, registry, cfg: EnvConfig, m_max: int | None = None,
+                 arrivals: ArrivalConfig | None = None):
+        super().__init__(registry, cfg, arrivals)
+        m_max = self.num_sas if m_max is None else m_max
+        if m_max < self.num_sas:
+            raise ValueError(f"m_max {m_max} < fleet num_sas "
+                             f"{self.num_sas}")
+        self.true_num_sas = self.num_sas
+        pad = m_max - self.num_sas
+        if pad:
+            w = ((0, 0), (0, 0), (0, pad))
+            self.lat = jnp.pad(self.lat, w, constant_values=PAD_LAT_US)
+            self.bw = jnp.pad(self.bw, w)
+            self.en = jnp.pad(self.en, w)
+            self.num_sas = m_max
+            self.feat_dim = 4 + 2 * m_max
+            self.act_dim = 1 + m_max
+        self.sa_mask = jnp.arange(m_max) < self.true_num_sas
+        self.descriptors = jnp.asarray(
+            fleet_descriptors(registry.mas, m_max), jnp.float32)
+
+
+def build_padded_envs(workload: str, fleets, cfg: EnvConfig,
+                      arrivals: ArrivalConfig | None = None,
+                      m_max: int | None = None) -> list[PaddedEnv]:
+    """One :class:`PaddedEnv` per fleet preset, all at a common width.
+
+    ``m_max`` defaults to the widest requested fleet; pass the
+    checkpoint's recorded ``m_max`` when restoring a generalist onto
+    fleets narrower than it was trained for.  All envs characterize the
+    same ``workload``, so model count / Lmax — and with the shared
+    ``m_max``, every compiled shape — agree across the list.
+    """
+    regs = [build_registry(workload, mas=f) for f in fleets]
+    m_max = m_max or max(r.mas.num_sas for r in regs)
+    return [PaddedEnv(r, cfg, m_max, arrivals) for r in regs]
+
+
+def stack_fleet_tables(envs: list[PaddedEnv]) -> dict[str, jnp.ndarray]:
+    """Stack per-fleet padded tables into ``(K, ...)`` device tensors.
+
+    Everything a training round needs to *become* fleet ``f`` by a
+    traced gather: characterization tables + per-model min latency
+    (trace generation derives SLA budgets from it), the fleet's shared
+    DRAM bandwidth, and the descriptor/validity tensors the policy
+    conditions on.
+    """
+    if len({(e.num_sas, e.lat.shape) for e in envs}) != 1:
+        raise ValueError("fleet envs must share m_max and table shapes")
+    stk = lambda xs: jnp.stack([jnp.asarray(x, jnp.float32) for x in xs])
+    return dict(
+        lat=stk([e.lat for e in envs]),
+        bw=stk([e.bw for e in envs]),
+        en=stk([e.en for e in envs]),
+        min_lat=stk([e.min_lat for e in envs]),
+        bandwidth=jnp.asarray([e.cfg.bandwidth_gbps for e in envs],
+                              jnp.float32),
+        desc=stk([e.descriptors for e in envs]),
+        sa_mask=jnp.stack([e.sa_mask for e in envs]),
+    )

@@ -1,0 +1,106 @@
+"""M-agnostic feature/action space of the fleet-conditioned policy.
+
+The base RELMAS nets are shaped by the platform: ``F = 4 + 2M`` slot
+features and ``G = 1 + M`` action channels, so a checkpoint is welded
+to one fleet width.  The generalist works in a fleet-independent space:
+
+- per-SA channels are padded to a fixed ``M_max`` (the padded
+  environment of ``repro.core.generalist.env`` already emits
+  ``M_max``-wide features, with padding SAs carrying saturated cost);
+- every slot row — including the primer virtual SJ — gains the
+  flattened per-SA hardware-descriptor block of
+  ``repro.costmodel.descriptors`` (``M_max * DESC_DIM`` extra inputs),
+  so the *same* weights can read "which machine am I scheduling for"
+  from the input instead of baking it into the weights;
+- the SA-allocation argmax and the action channels fed to the critic
+  are masked by per-SA validity (``present``), so a padding SA is never
+  selected and the critic's action input is fleet-invariant.
+
+Everything here is pure shape/bit bookkeeping: at ``M == M_max`` with a
+full validity mask each transform is the identity (bit-for-bit — see
+``tests/test_generalist.py``), which is what makes the generalist a
+strict superset of the specialist policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import policy as P
+from repro.costmodel.descriptors import DESC_DIM
+
+
+@dataclasses.dataclass(frozen=True)
+class GeneralistSpec:
+    """Fleet-independent policy shape: everything the checkpoint needs
+    to restore on a platform it never saw (recorded in ckpt meta)."""
+    m_max: int
+    desc_dim: int = DESC_DIM
+
+    @property
+    def env_feat_dim(self) -> int:
+        """Width of the padded environment's slot features."""
+        return 4 + 2 * self.m_max
+
+    @property
+    def feat_dim(self) -> int:
+        """Actor input width: padded env features + descriptor block."""
+        return self.env_feat_dim + self.m_max * self.desc_dim
+
+    @property
+    def act_dim(self) -> int:
+        return 1 + self.m_max
+
+    def pcfg(self, hidden: int = 64, **kw) -> P.PolicyConfig:
+        return P.PolicyConfig(feat_dim=self.feat_dim, act_dim=self.act_dim,
+                              hidden=hidden, **kw)
+
+
+def append_descriptors(feats, desc):
+    """Tile the flattened descriptor block onto every slot row.
+
+    feats: (T, 4 + 2*M_max) padded env features (primer at t=0);
+    desc:  (M_max, DESC_DIM) fleet descriptor table (may be traced).
+    -> (T, feat_dim) generalist actor/critic state input.
+    """
+    dflat = desc.reshape(-1).astype(feats.dtype)
+    dtile = jnp.broadcast_to(dflat, (feats.shape[0], dflat.shape[0]))
+    return jnp.concatenate([feats, dtile], axis=-1)
+
+
+def action_channel_mask(sa_mask, dtype=jnp.float32):
+    """(1 + M_max,) multiplicative mask over action channels: the
+    temporal-priority channel always passes, allocation channels only
+    for real SAs.  All-ones at ``M == M_max`` (identity)."""
+    return jnp.concatenate([jnp.ones((1,), dtype),
+                            sa_mask.astype(dtype)])
+
+
+def masked_allocation(sa_logits, sa_mask):
+    """argmax over valid SA channels only — a padding SA is never
+    selected even if its (masked-to-zero) logit would win a plain
+    argmax.  sa_logits (..., M_max), sa_mask (M_max,) bool."""
+    return jnp.argmax(jnp.where(sa_mask, sa_logits, -jnp.inf),
+                      axis=-1).astype(jnp.int32)
+
+
+def generalist_act_fn(params, pcfg: P.PolicyConfig, desc, sa_mask):
+    """Descriptor-conditioned actor as an ``env.episode`` act_fn.
+
+    ``desc`` (M_max, D) and ``sa_mask`` (M_max,) may be traced values
+    (the multi-fleet trainer gathers them per round from stacked fleet
+    tensors).  ``noise`` is the pre-drawn per-period exploration block
+    (the ``aux`` scan input), exactly as in the specialist path.
+    """
+    chan = action_channel_mask(sa_mask)
+
+    def act_fn(feats, mask, slots, st, key, noise):
+        a = P.actor_apply(params, pcfg, append_descriptors(feats, desc),
+                          mask)
+        a = jnp.clip(a + noise, -1.0, 1.0) * chan
+        prio = a[:, 0]
+        sa = masked_allocation(a[:, 1:], sa_mask)
+        return a, prio, sa
+
+    return act_fn

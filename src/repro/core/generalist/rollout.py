@@ -1,0 +1,145 @@
+"""Batched rollout/eval runners for the fleet-conditioned policy.
+
+Thin layer over ``repro.core.rollout``: the same device-resident
+``lax.scan``-over-periods / ``vmap``-over-episodes pipeline, with the
+descriptor-conditioned act_fn of ``repro.core.generalist.features``
+swapped in.  One generalist parameter set evaluates on ANY
+:class:`~repro.core.generalist.env.PaddedEnv` — the env's own
+``descriptors`` / ``sa_mask`` attributes condition the policy, the
+jit cache lives per env instance exactly like the specialist runners.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy as P
+from repro.core.generalist.env import PaddedEnv
+from repro.core.generalist.features import (GeneralistSpec,
+                                            generalist_act_fn)
+from repro.core.rollout import (_runner_cache, collect_episodes,
+                                stack_episodes)
+
+Metrics = dict[str, jnp.ndarray]
+
+
+def collect_generalist(env: PaddedEnv, pcfg: P.PolicyConfig, params,
+                       states, traces, key, sigma, desc, sa_mask,
+                       collect: bool = True):
+    """Traceable generalist twin of ``rollout.collect_episodes``.
+
+    ``desc`` / ``sa_mask`` may be traced (the multi-fleet round binds
+    them per fleet index); exploration noise is drawn at the padded
+    ``1 + M_max`` action width, padding channels masked after the
+    clip exactly like the deterministic path.
+    """
+    return collect_episodes(
+        env, pcfg, params, states, traces, key, sigma, collect,
+        act_fn=generalist_act_fn(params, pcfg, desc, sa_mask),
+        act_dim=pcfg.act_dim)
+
+
+def make_generalist_evaluate_batch(env: PaddedEnv, pcfg: P.PolicyConfig):
+    """Jitted batched evaluator for a generalist on one padded env.
+
+    Returns ``eval_fn(params, states, traces)`` -> metrics stacked over
+    the batch axis; descriptors/mask close over the env's (concrete)
+    attributes — one compile per (env, pcfg), cached on the env.
+    """
+    key_ = ("generalist_evaluate_batch", pcfg)
+    cache = _runner_cache(env)
+    if key_ in cache:
+        return cache[key_]
+
+    desc, sa_mask = env.descriptors, env.sa_mask
+
+    @jax.jit
+    def eval_fn(params, states, traces) -> Metrics:
+        def one(state, trace):
+            *_, metrics = env.episode(
+                state, trace,
+                generalist_act_fn(params, pcfg, desc, sa_mask),
+                collect=False)
+            return metrics
+        return jax.vmap(one)(states, traces)
+
+    cache[key_] = eval_fn
+    return eval_fn
+
+
+def evaluate_generalist_batch(env: PaddedEnv, pcfg: P.PolicyConfig,
+                              params, seeds,
+                              arrivals=None) -> dict[str, float]:
+    """Mean generalist metrics across seeds, one jitted device call —
+    the generalist twin of ``rollout.evaluate_batch``."""
+    traces, states = stack_episodes(env, seeds, arrivals)
+    metrics = make_generalist_evaluate_batch(env, pcfg)(params, states,
+                                                        traces)
+    return {k: float(jnp.mean(v)) for k, v in metrics.items()}
+
+
+def make_generalist_period(env: PaddedEnv, pcfg: P.PolicyConfig):
+    """Jitted one-period step (serving-side hot path): signature matches
+    ``rollout.make_policy_period`` so ``serving.MultiTenantService`` can
+    swap it in for generalist checkpoints."""
+    desc, sa_mask = env.descriptors, env.sa_mask
+    act = lambda params: generalist_act_fn(params, pcfg, desc, sa_mask)
+
+    @functools.partial(jax.jit, static_argnames=("sigma",))
+    def period(params, state, trace, key, sigma: float = 0.0):
+        noise = (sigma * jax.random.normal(
+            key, (env.cfg.max_rq, pcfg.act_dim)) if sigma > 0.0 else
+            jnp.zeros((env.cfg.max_rq, pcfg.act_dim)))
+        return env.period(
+            state, trace,
+            lambda feats, mask, slots, st: act(params)(
+                feats, mask, slots, st, key, noise))
+
+    return period
+
+
+def restore_spec(meta: dict) -> GeneralistSpec:
+    """Rebuild the policy's fleet-independent shape from ckpt meta."""
+    from repro.costmodel.descriptors import DESC_DIM
+    return GeneralistSpec(m_max=int(meta["m_max"]),
+                          desc_dim=int(meta.get("desc_dim", DESC_DIM)))
+
+
+def load_generalist_checkpoint(ckpt_dir: str | None, *,
+                               min_num_sas: int = 0,
+                               default_hidden: int = 64):
+    """Restore a generalist actor checkpoint — the ONE definition of the
+    meta-gate + spec-rebuild + restore sequence shared by serving and
+    the benchmark loaders.
+
+    Returns ``(params, pcfg, spec, restored)`` when ``ckpt_dir`` holds a
+    generalist checkpoint (``policy_kind: "generalist"`` in meta) wide
+    enough for ``min_num_sas``; ``restored`` is False when the meta
+    matched but the weight restore itself failed (``params`` are then a
+    fresh init of the checkpoint's architecture — callers decide whether
+    an untrained generalist beats their own fallback).  Returns ``None``
+    when the directory holds no usable generalist checkpoint.
+    """
+    import os
+
+    from repro.ckpt import read_checkpoint_meta, restore_checkpoint
+
+    if not ckpt_dir or not os.path.isdir(ckpt_dir):
+        return None
+    meta = read_checkpoint_meta(ckpt_dir)
+    if (meta or {}).get("policy_kind") != "generalist" \
+            or int(meta["m_max"]) < min_num_sas:
+        return None
+    spec = restore_spec(meta)
+    pcfg = spec.pcfg(hidden=int(meta.get("hidden", default_hidden)))
+    params = P.init_actor(jax.random.PRNGKey(0), pcfg)
+    restored = True
+    try:
+        params, _, _ = restore_checkpoint(ckpt_dir, params)
+    except (ValueError, KeyError, FileNotFoundError) as e:
+        print(f"[generalist] checkpoint in {ckpt_dir} matched but failed "
+              f"to restore ({e}); params are untrained")
+        restored = False
+    return params, pcfg, spec, restored

@@ -1,0 +1,191 @@
+"""Multi-fleet fused training rounds for the generalist policy.
+
+Mirrors ``repro.core.train`` — device-side trace generation, batched
+rollout, donated replay ring write, ``lax.cond``-gated update scan,
+on-device sigma decay, all ONE jitted donated dispatch per round (and
+``lax.scan``-fused chunks of rounds) — with one new in-trace step: each
+round **samples a fleet** for its episode batch.  The fleet tensors of
+every training platform are stacked along a leading ``(K, ...)`` axis
+(``stack_fleet_tables``); the round gathers fleet ``f``'s tables by a
+*traced* index and rebinds them into the padded template env
+(``SchedulingEnv.bind_tables``), so switching platforms is pure data
+movement — no recompile per fleet, exactly like scenario presets.
+
+The replay ring stores the *padded env* features (``4 + 2*M_max``) plus
+a per-transition ``fleet`` index column instead of the full
+descriptor-augmented rows: the update scan re-appends the (static,
+tiny) descriptor block by a per-sample gather (``expand_batch``), which
+keeps the ring ~``1 + m*D/(4+2m)`` times smaller and lets transitions
+from different fleets mix freely in one buffer — an off-policy learner
+trains on whatever mixture the sampler produced.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ddpg as D
+from repro.core.generalist.env import PaddedEnv, stack_fleet_tables
+from repro.core.generalist.features import (GeneralistSpec,
+                                            action_channel_mask)
+from repro.core.generalist.rollout import collect_generalist
+from repro.core.replay import replay_add, replay_init, replay_sample
+from repro.core.rollout import _runner_cache
+from repro.core.train import INFO_KEYS
+
+Metrics = dict[str, jnp.ndarray]
+
+
+def generalist_replay_init(capacity: int, seq_len: int,
+                           spec: GeneralistSpec) -> dict:
+    """Replay ring in the padded-env feature space + a ``fleet`` index
+    column per transition (descriptors re-attached at sample time)."""
+    buf = replay_init(capacity, seq_len, spec.env_feat_dim, spec.act_dim)
+    buf["fleet"] = jnp.zeros((capacity,), jnp.int32)
+    return buf
+
+
+def expand_batch(batch: dict, desc_all, sa_mask_all) -> dict:
+    """Re-attach descriptor conditioning to a sampled replay batch.
+
+    Gathers each sample's fleet descriptor block (``desc_all`` (K, M,
+    D)), tiles it onto every timestep of ``s``/``s2``, and adds the
+    per-sample ``act_mask`` (:func:`action_channel_mask`) that keeps the
+    DDPG update's regenerated actions masked like the behaviour
+    policy's (``repro.core.ddpg.ddpg_update``).
+    """
+    f = batch["fleet"]
+    d = desc_all[f]                                   # (B, M, D)
+    B, T = batch["s"].shape[:2]
+    dflat = d.reshape(B, 1, -1).astype(batch["s"].dtype)
+    dtile = jnp.broadcast_to(dflat, (B, T, dflat.shape[-1]))
+    am = jax.vmap(action_channel_mask)(sa_mask_all[f])  # (B, 1 + M)
+    return {**batch,
+            "s": jnp.concatenate([batch["s"], dtile], axis=-1),
+            "s2": jnp.concatenate([batch["s2"], dtile], axis=-1),
+            "act_mask": am}
+
+
+def generalist_update_rounds(state: D.DDPGState, dcfg: D.DDPGConfig,
+                             buf: dict, desc_all, sa_mask_all, key,
+                             num_updates: int, batch_size: int):
+    """``ddpg_update_rounds`` with per-sample descriptor re-attachment:
+    the whole sample -> expand -> update -> soft-target chain fuses
+    into one ``lax.scan`` (traceable body)."""
+    keys = jax.random.split(key, num_updates)
+
+    def step(st, k):
+        batch = expand_batch(replay_sample(buf, k, batch_size),
+                             desc_all, sa_mask_all)
+        return D.ddpg_update(st, dcfg, batch)
+
+    return jax.lax.scan(step, state, keys)
+
+
+def _generalist_round_body(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
+                           batch_episodes: int, num_updates: int,
+                           batch_size: int, sigma_min: float,
+                           sigma_decay: float, arrivals=None):
+    """Pure single-round body: sample fleet -> bind tables -> collect ->
+    ring write (+fleet column) -> gated update scan -> sigma decay."""
+    template, K = envs[0], len(envs)
+    stack = stack_fleet_tables(envs)
+    pcfg = dcfg.policy
+
+    def round_fn(state: D.DDPGState, buf: dict, key, sigma, do_update):
+        kfleet, ktrace, kroll, kup = jax.random.split(key, 4)
+        f = jax.random.randint(kfleet, (), 0, K)
+        env_f = template.bind_tables(
+            lat=stack["lat"][f], bw=stack["bw"][f], en=stack["en"][f],
+            min_lat=stack["min_lat"][f],
+            bandwidth_gbps=stack["bandwidth"][f])
+        traces, states = env_f.new_episodes_jax(ktrace, batch_episodes,
+                                                arrivals)
+        _, trans, einfos, mets = collect_generalist(
+            env_f, pcfg, state.actor, states, traces, kroll, sigma,
+            desc=stack["desc"][f], sa_mask=stack["sa_mask"][f])
+        flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in trans.items()}
+        flat["fleet"] = jnp.full((flat["r"].shape[0],), f, jnp.int32)
+        buf = replay_add(buf, flat)
+
+        def upd(st):
+            st2, infos = generalist_update_rounds(
+                st, dcfg, buf, stack["desc"], stack["sa_mask"], kup,
+                num_updates, batch_size)
+            return st2, {k: infos[k][-1] for k in INFO_KEYS}
+
+        def no_upd(st):
+            return st, {k: jnp.zeros((), jnp.float32) for k in INFO_KEYS}
+
+        state, info = jax.lax.cond(do_update, upd, no_upd, state)
+        sigma = jnp.maximum(jnp.float32(sigma_min),
+                            sigma * sigma_decay ** batch_episodes)
+        metrics = dict(sla=jnp.mean(mets["sla_rate"]),
+                       reward=jnp.mean(einfos["reward"]),
+                       energy_uj=jnp.mean(mets["energy_uj"]),
+                       sigma=sigma, did_update=do_update,
+                       fleet=f, **info)
+        return state, buf, sigma, metrics
+
+    return round_fn
+
+
+def _cache_key(tag: str, dcfg, n_envs: int, kw: dict[str, Any]):
+    return (tag, dcfg, n_envs) + tuple(sorted(kw.items()))
+
+
+def make_generalist_round(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
+                          batch_episodes: int, num_updates: int,
+                          batch_size: int, sigma_min: float,
+                          sigma_decay: float, arrivals=None):
+    """One fleet-sampling training round as ONE jitted donated call.
+
+    Same contract as ``core.train.make_train_round`` (``state``/``buf``
+    donated — rebind; ``sigma`` a device scalar; ``do_update`` a device
+    bool), plus a ``fleet`` entry in the metrics dict recording which
+    platform the round collected on.  Cached on the template env.
+    """
+    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay, arrivals=arrivals)
+    key_ = _cache_key("generalist_round", dcfg, len(envs), kw)
+    cache = _runner_cache(envs[0])
+    if key_ not in cache:
+        cache[key_] = jax.jit(_generalist_round_body(envs, dcfg, **kw),
+                              donate_argnums=(0, 1))
+    return cache[key_]
+
+
+def make_generalist_rounds(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
+                           batch_episodes: int, num_updates: int,
+                           batch_size: int, sigma_min: float,
+                           sigma_decay: float, arrivals=None):
+    """A chunk of R fleet-sampling rounds in one ``lax.scan`` dispatch —
+    the generalist twin of ``core.train.make_train_rounds`` (``keys``
+    (R, 2), ``do_update`` (R,), metrics stacked over rounds)."""
+    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay, arrivals=arrivals)
+    key_ = _cache_key("generalist_rounds", dcfg, len(envs), kw)
+    cache = _runner_cache(envs[0])
+    if key_ in cache:
+        return cache[key_]
+
+    round_fn = _generalist_round_body(envs, dcfg, **kw)
+
+    def _scan(state, buf, keys, sigma, do_update):
+        def step(carry, xs):
+            st, bf, sg = carry
+            k, du = xs
+            st, bf, sg, m = round_fn(st, bf, k, sg, du)
+            return (st, bf, sg), m
+
+        (state, buf, sigma), metrics = jax.lax.scan(
+            step, (state, buf, sigma), (keys, do_update))
+        return state, buf, sigma, metrics
+
+    rounds_fn = jax.jit(_scan, donate_argnums=(0, 1))
+    cache[key_] = rounds_fn
+    return rounds_fn

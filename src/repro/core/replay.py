@@ -38,6 +38,15 @@ import numpy as np
 _FIELDS = ("s", "mask", "a", "r", "s2", "mask2")
 
 
+def replay_fields(buf: dict) -> tuple[str, ...]:
+    """Stored per-transition fields of a buffer: everything except the
+    ring bookkeeping scalars.  The base layout is :data:`_FIELDS`;
+    consumers may allocate extra per-transition arrays (the generalist
+    trainer adds a ``fleet`` index column) and the ring ops honour them
+    uniformly."""
+    return tuple(k for k in buf if k not in ("ptr", "size"))
+
+
 def replay_init(capacity: int, seq_len: int, feat_dim: int,
                 act_dim: int) -> dict[str, jnp.ndarray]:
     T, F, G = seq_len, feat_dim, act_dim
@@ -65,7 +74,7 @@ def replay_add(buf: dict, batch: dict) -> dict:
     n = batch["r"].shape[0]
     idx = (buf["ptr"] + jnp.arange(n)) % cap
     out = {k: buf[k].at[idx].set(batch[k].astype(buf[k].dtype))
-           for k in _FIELDS}
+           for k in replay_fields(buf)}
     out["ptr"] = ((buf["ptr"] + n) % cap).astype(jnp.int32)
     out["size"] = jnp.minimum(buf["size"] + n, cap).astype(jnp.int32)
     return out
@@ -77,7 +86,7 @@ replay_add_batch = jax.jit(replay_add, donate_argnums=(0,))
 
 
 def _gather(buf: dict, idx) -> dict:
-    return {k: buf[k][idx] for k in _FIELDS}
+    return {k: buf[k][idx] for k in replay_fields(buf)}
 
 
 @functools.partial(jax.jit, static_argnames=("batch_size",))

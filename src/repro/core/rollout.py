@@ -59,20 +59,26 @@ def _runner_cache(env: SchedulingEnv) -> dict:
 
 
 def collect_episodes(env: SchedulingEnv, pcfg: P.PolicyConfig, params,
-                     states, traces, key, sigma, collect: bool = True):
+                     states, traces, key, sigma, collect: bool = True,
+                     act_fn=None, act_dim: int | None = None):
     """Traceable batched policy collection: draw the whole batch's
     exploration-noise block from ``key`` and run every episode through
     ``env.episode`` under ``vmap``.  The single definition of the
     noise scheme + episode wiring shared by the standalone collector
-    (:func:`make_rollout_batch`) and the fused training round
-    (``repro.core.train``).  Returns the vmapped episode outputs
-    ``(final_states, transitions, infos, metrics)``."""
+    (:func:`make_rollout_batch`), the fused training round
+    (``repro.core.train``), and — via ``act_fn``/``act_dim`` overrides —
+    the descriptor-conditioned generalist policy
+    (``repro.core.generalist``), whose action space is ``1 + M_max``
+    rather than the env's ``1 + M``.  Returns the vmapped episode
+    outputs ``(final_states, transitions, infos, metrics)``."""
     batch = states["t"].shape[0]
     noise = sigma * jax.random.normal(
-        key, (batch, env.cfg.periods, env.cfg.max_rq, env.act_dim))
+        key, (batch, env.cfg.periods, env.cfg.max_rq,
+              act_dim or env.act_dim))
+    act_fn = act_fn or _policy_act_fn(params, pcfg)
 
     def one(state, trace, ep_noise):
-        return env.episode(state, trace, _policy_act_fn(params, pcfg),
+        return env.episode(state, trace, act_fn,
                            aux=ep_noise, collect=collect)
 
     return jax.vmap(one)(states, traces, noise)

@@ -14,6 +14,9 @@ from repro.costmodel.accelerators import (
     SAClass, EYERISS_SMALL, EYERISS_LARGE, SIMBA_SMALL, SIMBA_LARGE,
     DEFAULT_MAS, MASConfig, layer_cost,
 )
+from repro.costmodel.descriptors import (
+    DESC_DIM, DESC_FIELDS, fleet_descriptors, sa_descriptor,
+)
 from repro.costmodel.fleets import (
     FLEETS, DEFAULT_FLEET, FleetConfig, fleet_names, get_fleet,
 )
@@ -23,6 +26,7 @@ from repro.costmodel.registry import ModelTable, register_model, Registry
 __all__ = [
     "SAClass", "EYERISS_SMALL", "EYERISS_LARGE", "SIMBA_SMALL", "SIMBA_LARGE",
     "DEFAULT_MAS", "MASConfig", "layer_cost",
+    "DESC_DIM", "DESC_FIELDS", "fleet_descriptors", "sa_descriptor",
     "FLEETS", "DEFAULT_FLEET", "FleetConfig", "fleet_names", "get_fleet",
     "LayerSpec", "conv2d", "dwconv2d", "fc", "pool", "gemm", "elementwise",
     "ModelTable", "register_model", "Registry",

@@ -12,13 +12,23 @@ transfer per *chunk*, not per round.  Evaluation runs through the
 jitted ``evaluate_batch``.
 
 Knobs:
-- ``--fleet NAME``        accelerator-fleet preset (``paper6``,
+- ``--fleet NAME[,NAME...]``  accelerator-fleet preset(s) (``paper6``,
   ``4simba_4eyeriss``, ``8simba``, ``8eyeriss``, ``2simba_6eyeriss``,
-  ``big_little``, ... — see ``repro.costmodel.fleets``): the workload
-  is re-characterized on that platform and the policy's feature/action
-  dims follow its ``num_sas``, so this trains a per-fleet agent;
-  ``--bandwidth-gbps 0`` (the default) uses the fleet's shared DRAM
+  ``big_little``, ... — see ``repro.costmodel.fleets``): one name
+  trains a per-fleet *specialist* (workload re-characterized on that
+  platform, policy dims follow its ``num_sas``); a comma list trains a
+  fleet-conditioned *generalist* (``repro.core.generalist``) — per-SA
+  hardware descriptors in the features, channels padded to ``M_max``,
+  and each fused round samples a fleet for its episode batch (fleet
+  tensors are stacked trace data: no recompile per fleet).
+  ``--bandwidth-gbps 0`` (the default) uses each fleet's shared DRAM
   bandwidth;
+- ``--policy-kind KIND``  ``auto`` (default: generalist iff several
+  fleets) | ``generalist`` (force the M-agnostic descriptor-conditioned
+  policy even on one fleet — its checkpoints restore on ANY fleet with
+  ``num_sas <= m_max``) | ``specialist``;
+- ``--m-max M``           pad width for the generalist (0 = widest
+  requested fleet; raise it to leave headroom for larger platforms);
 - ``--batch-episodes N``  episodes collected per training round;
 - ``--scenario NAME``     arrival-process preset (``default``,
   ``steady``, ``burst``, ``diurnal``, ``heavy_tail`` — see
@@ -59,6 +69,11 @@ import numpy as np
 from repro.ckpt import CheckpointManager
 from repro.core import baselines as BL
 from repro.core import policy as P, ddpg as D
+from repro.core.generalist import (GeneralistSpec, build_padded_envs,
+                                   evaluate_generalist_batch,
+                                   generalist_replay_init,
+                                   make_generalist_round,
+                                   make_generalist_rounds)
 from repro.core.replay import replay_init
 from repro.core.rollout import evaluate_batch, evaluate_batch_baseline
 from repro.core.train import (INFO_KEYS, make_train_round,
@@ -71,7 +86,16 @@ from repro.workloads import build_registry
 @dataclasses.dataclass
 class TrainConfig:
     workload: str = "light"
-    fleet: str = "paper6"      # accelerator platform (costmodel.fleets)
+    # accelerator platform(s) (costmodel.fleets); a comma list trains a
+    # fleet-conditioned generalist (repro.core.generalist)
+    fleet: str = "paper6"
+    # auto | generalist | specialist (auto: generalist iff several fleets)
+    policy_kind: str = "auto"
+    m_max: int = 0             # generalist pad width (0 = widest fleet)
+    # best-checkpoint selection: mean | min_fleet (generalist only:
+    # maximin over per-fleet eval SLA — keeps the saved policy from
+    # trading its weakest platform away for the mean)
+    best_metric: str = "mean"
     qos_level: str = "medium"
     qos_factor: float = 3.0
     load: float = 0.9
@@ -105,8 +129,7 @@ class TrainConfig:
     fail_at: int = -1          # crash injection (episode index) for FT tests
 
 
-def build_env(cfg: TrainConfig) -> SchedulingEnv:
-    reg = build_registry(cfg.workload, mas=cfg.fleet)
+def _env_cfgs(cfg: TrainConfig) -> tuple[EnvConfig, ArrivalConfig]:
     ecfg = EnvConfig(t_s_us=cfg.t_s_us, periods=cfg.periods,
                      max_rq=cfg.max_rq, max_jobs=cfg.max_jobs,
                      bandwidth_gbps=cfg.bandwidth_gbps)
@@ -115,7 +138,37 @@ def build_env(cfg: TrainConfig) -> SchedulingEnv:
                         horizon_us=ecfg.horizon_us,
                         slack_us=2.0 * cfg.t_s_us,
                         scenario=cfg.scenario)
+    return ecfg, arr
+
+
+def build_env(cfg: TrainConfig, fleet: str | None = None) -> SchedulingEnv:
+    reg = build_registry(cfg.workload, mas=fleet or cfg.fleet)
+    ecfg, arr = _env_cfgs(cfg)
     return SchedulingEnv(reg, ecfg, arr)
+
+
+def _resolve_kind(cfg: TrainConfig) -> tuple[str, list[str]]:
+    """-> (policy_kind, fleet list) with ``auto`` resolved."""
+    fleets = [f.strip() for f in cfg.fleet.split(",") if f.strip()]
+    kind = cfg.policy_kind
+    if kind == "auto":
+        kind = "generalist" if len(fleets) > 1 else "specialist"
+    if kind not in ("generalist", "specialist"):
+        raise ValueError(f"--policy-kind must be auto|generalist|"
+                         f"specialist, got {cfg.policy_kind!r}")
+    if kind == "specialist" and len(fleets) > 1:
+        raise ValueError("a specialist policy is fleet-shaped: train "
+                         "one per --fleet, or use "
+                         "--policy-kind generalist for a multi-fleet run")
+    # fail fast, not after the training budget is spent at the first eval
+    if cfg.best_metric not in ("mean", "min_fleet"):
+        raise ValueError(f"--best-metric must be mean|min_fleet, got "
+                         f"{cfg.best_metric!r}")
+    if cfg.best_metric == "min_fleet" and kind != "generalist":
+        raise ValueError("--best-metric min_fleet needs per-fleet eval — "
+                         "a generalist run (--fleet a,b,... or "
+                         "--policy-kind generalist)")
+    return kind, fleets
 
 
 def _plan_chunks(cfg: TrainConfig, start_ep: int) -> list[dict]:
@@ -171,9 +224,22 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
             f"a collection round writes batch_episodes * periods = "
             f"{cfg.batch_episodes * cfg.periods} transitions, which must "
             f"fit --replay-capacity ({cfg.replay_capacity})")
-    env = build_env(cfg)
-    pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
-                          hidden=cfg.hidden)
+    kind, fleets = _resolve_kind(cfg)
+    ecfg, arr = _env_cfgs(cfg)
+    if kind == "generalist":
+        envs = build_padded_envs(cfg.workload, fleets, ecfg, arr,
+                                 m_max=cfg.m_max or None)
+        env = envs[0]
+        spec = GeneralistSpec(m_max=env.num_sas)
+        pcfg = spec.pcfg(hidden=cfg.hidden)
+        log_fn(f"[generalist] fleets={','.join(fleets)} "
+               f"m_max={spec.m_max} desc_dim={spec.desc_dim} "
+               f"feat_dim={pcfg.feat_dim}")
+    else:
+        envs, spec = None, None
+        env = build_env(cfg)
+        pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
+                              hidden=cfg.hidden)
     dcfg = D.DDPGConfig(policy=pcfg)
     key = jax.random.PRNGKey(cfg.seed)
     state = D.init_ddpg(key, dcfg)
@@ -183,17 +249,31 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         try:
             state, step, meta = mgr.restore(state, step)
         except ValueError as e:
-            # policy shapes follow --hidden and the fleet's num_sas
-            # (feat/act dims) — a resume with either changed lands here
+            # policy shapes follow --hidden, --policy-kind, and the
+            # fleet's num_sas (feat/act dims) — a resume with any of
+            # them changed lands here
             raise ValueError(
                 f"checkpoint in {cfg.outdir} does not match this run's "
-                f"policy shapes — resume with the --hidden/--fleet it "
-                f"was trained with (this run: --hidden {cfg.hidden} "
-                f"--fleet {cfg.fleet}) or use a fresh --outdir [{e}]"
-                ) from None
-        # pre-fleet-era checkpoints (no meta key) were all paper6 runs
+                f"policy shapes — resume with the --hidden/--fleet/"
+                f"--policy-kind it was trained with (this run: --hidden "
+                f"{cfg.hidden} --fleet {cfg.fleet} [{kind}]) or use a "
+                f"fresh --outdir [{e}]") from None
+        ck_kind = meta.get("policy_kind", "specialist")
         ck_fleet = meta.get("fleet", "paper6")
-        if ck_fleet != cfg.fleet:
+        if ck_kind == "generalist" or kind == "generalist":
+            # a generalist is fleet-independent by construction: accept
+            # the checkpoint on ANY fleet list (shape mismatches — a
+            # different m_max/hidden — were already caught above); a
+            # kind flip between runs also lands in the shape error
+            if ck_kind != kind:
+                raise ValueError(
+                    f"checkpoint in {cfg.outdir} is {ck_kind!r} but this "
+                    f"run is {kind!r}; use a fresh --outdir")
+            if ck_fleet != cfg.fleet:
+                log_fn(f"[resume] generalist checkpoint trained on "
+                       f"{ck_fleet!r}, continuing on {cfg.fleet!r}")
+        elif ck_fleet != cfg.fleet:
+            # legacy per-fleet checkpoints stay platform-locked:
             # same-width fleets restore cleanly but are different
             # platforms — refuse to silently continue cross-fleet
             raise ValueError(
@@ -206,15 +286,22 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
     baseline_scores: dict[str, dict] = {}
     if cfg.eval_baselines:
         # reference points on the exact eval seeds/regime, all through
-        # the batched device-resident runners (one jitted call each)
+        # the batched device-resident runners (one jitted call each);
+        # heuristics act on raw slot tables, so a generalist run scores
+        # them on each fleet's UNPADDED env (padding columns would
+        # distort cost-greedy baselines)
         eval_seed_range = range(7000, 7000 + cfg.eval_seeds)
+        benvs = ([build_env(cfg, f) for f in fleets]
+                 if kind == "generalist" else [env])
         for name in cfg.eval_baselines.split(","):
             name = name.strip()
             fn = (BL.make_magma_baseline(BL.MagmaConfig(
                       population=cfg.magma_population,
                       generations=cfg.magma_generations))
                   if name == "magma" else BL.BASELINES[name])
-            m = evaluate_batch_baseline(env, fn, eval_seed_range)
+            ms = [evaluate_batch_baseline(e, fn, eval_seed_range)
+                  for e in benvs]
+            m = {k: float(np.mean([x[k] for x in ms])) for k in ms[0]}
             baseline_scores[name] = {k: round(v, 4) for k, v in m.items()}
             log_fn(f"[baseline] {name} sla={m['sla_rate']:.4f}")
 
@@ -227,8 +314,10 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                f"training rounds run on one (collection sharding is a "
                f"ROADMAP follow-up)")
 
-    buf = replay_init(cfg.replay_capacity, env.seq_len, env.feat_dim,
-                      env.act_dim)
+    buf = (generalist_replay_init(cfg.replay_capacity, env.seq_len, spec)
+           if kind == "generalist" else
+           replay_init(cfg.replay_capacity, env.seq_len, env.feat_dim,
+                       env.act_dim))
     os.makedirs(cfg.outdir, exist_ok=True)
     logf = open(os.path.join(cfg.outdir, "log.jsonl"), "a")
     if baseline_scores:
@@ -245,6 +334,32 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                     batch_size=cfg.batch_size, sigma_min=cfg.sigma_min,
                     sigma_decay=cfg.sigma_decay)
 
+    if kind == "generalist":
+        make_round = lambda **kw: make_generalist_round(envs, dcfg, **kw)
+        make_rounds = lambda **kw: make_generalist_rounds(envs, dcfg, **kw)
+
+        def eval_policy_fn(params, seeds):
+            """Mean metrics across every training fleet (+ per-fleet)."""
+            per = {f: evaluate_generalist_batch(e, pcfg, params, seeds)
+                   for f, e in zip(fleets, envs)}
+            mean = {k: float(np.mean([m[k] for m in per.values()]))
+                    for k in next(iter(per.values()))}
+            mean["per_fleet"] = {f: round(m["sla_rate"], 4)
+                                 for f, m in per.items()}
+            return mean
+    else:
+        make_round = lambda **kw: make_train_round(env, dcfg, **kw)
+        make_rounds = lambda **kw: make_train_rounds(env, dcfg, **kw)
+        eval_policy_fn = lambda params, seeds: evaluate_batch(
+            env, pcfg, params, seeds)
+
+    ckpt_meta = dict(fleet=cfg.fleet, policy_kind=kind,
+                     hidden=cfg.hidden, feat_dim=pcfg.feat_dim,
+                     act_dim=pcfg.act_dim)
+    if spec is not None:
+        ckpt_meta.update(m_max=spec.m_max, desc_dim=spec.desc_dim,
+                         fleets=fleets)
+
     for chunk in _plan_chunks(cfg, start_ep):
         if chunk["fail"]:
             raise RuntimeError(f"injected failure at episode {cfg.fail_at}")
@@ -255,13 +370,13 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         t0 = time.time()
         if len(rounds) == 1:
             # single round (tail / tight cadence): one jitted dispatch
-            round_fn = make_train_round(env, dcfg, **trainer_kw(n))
+            round_fn = make_round(**trainer_kw(n))
             state, buf, sigma, mets = round_fn(state, buf, keys[0], sigma,
                                                bool(flags[0]))
             mets = jax.tree.map(lambda x: np.asarray(x)[None], mets)
         else:
             # a whole eval/ckpt chunk of rounds in one lax.scan dispatch
-            rounds_fn = make_train_rounds(env, dcfg, **trainer_kw(n))
+            rounds_fn = make_rounds(**trainer_kw(n))
             state, buf, sigma, mets = rounds_fn(state, buf, keys, sigma,
                                                 jnp.asarray(flags))
             mets = jax.tree.map(np.asarray, mets)   # one transfer per chunk
@@ -276,6 +391,8 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                        sigma=round(float(mets["sigma"][i]), 4),
                        periods_per_sec=pps,
                        secs=round(elapsed / len(rounds), 3))
+            if "fleet" in mets:     # generalist: sampled fleet per round
+                rec["fleet"] = fleets[int(mets["fleet"][i])]
             if mets["did_update"][i]:
                 rec.update({k: round(float(mets[k][i]), 5)
                             for k in INFO_KEYS})
@@ -290,35 +407,47 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         rs, rn = rounds[-1]
         ep = rs + rn - 1
         if chunk["eval"]:
-            ev = evaluate_batch(env, pcfg, state.actor,
+            ev = eval_policy_fn(state.actor,
                                 seeds=range(7000, 7000 + cfg.eval_seeds))
             history[-1]["eval_sla"] = round(ev["sla_rate"], 4)
-            logf.write(json.dumps({"episode": ep,
-                                   "eval_sla": history[-1]["eval_sla"]})
-                       + "\n")
+            evrec = {"episode": ep, "eval_sla": history[-1]["eval_sla"]}
+            if "per_fleet" in ev:
+                history[-1]["eval_sla_per_fleet"] = ev["per_fleet"]
+                evrec["eval_sla_per_fleet"] = ev["per_fleet"]
+            logf.write(json.dumps(evrec) + "\n")
             logf.flush()
             log_fn(f"[ep {ep:4d}] eval={ev['sla_rate']:.4f}")
-            if ev["sla_rate"] > best["sla_rate"]:
-                best = {**ev, "episode": ep}
+            score = (min(ev["per_fleet"].values())
+                     if cfg.best_metric == "min_fleet"
+                     else ev["sla_rate"])   # validated in _resolve_kind
+            if score > best.get("score", -1.0):
+                best = {**ev, "episode": ep, "score": score}
                 mgr_best = CheckpointManager(
                     os.path.join(cfg.outdir, "best"), keep=1)
                 mgr_best.save(ep, state.actor,
                               dict(episode=ep, sla=ev["sla_rate"],
-                                   hidden=cfg.hidden, fleet=cfg.fleet,
-                                   feat_dim=env.feat_dim,
-                                   act_dim=env.act_dim))
+                                   **ckpt_meta))
         if chunk["ckpt"]:
-            mgr.save(ep, state, dict(episode=ep, fleet=cfg.fleet))
+            mgr.save(ep, state, dict(episode=ep, **ckpt_meta))
     logf.close()
     return dict(best=best, history=history, env=env, pcfg=pcfg, state=state,
-                baselines=baseline_scores)
+                baselines=baseline_scores, policy_kind=kind, fleets=fleets,
+                spec=spec)
 
 
 _HELP = {
     "workload": "tenant set: light | heavy | mixed (workloads.cnn_zoo)",
-    "fleet": "accelerator-fleet preset (repro.costmodel.fleets): paper6, "
+    "fleet": "accelerator-fleet preset(s) (repro.costmodel.fleets): paper6, "
              "4simba_4eyeriss, 8simba, 8eyeriss, 2simba_6eyeriss, "
-             "big_little, ...; trains a per-fleet agent",
+             "big_little, ...; one name = per-fleet specialist, a comma "
+             "list = fleet-conditioned generalist (one fleet sampled per "
+             "fused round)",
+    "policy_kind": "auto | generalist | specialist (auto: generalist iff "
+                   "several fleets; generalist checkpoints restore on any "
+                   "fleet with num_sas <= m_max)",
+    "m_max": "generalist SA-channel pad width (0 = widest requested fleet)",
+    "best_metric": "best-checkpoint selection: mean | min_fleet (maximin "
+                   "over per-fleet eval SLA; generalist runs only)",
     "bandwidth_gbps": "shared DRAM GB/s; 0 = the fleet's dram_gbps",
     "scenario": "arrival preset: default | steady | burst | diurnal | "
                 "heavy_tail (sim.arrivals)",

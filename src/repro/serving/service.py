@@ -4,6 +4,14 @@ Thin deployment wrapper over ``sim.SchedulingEnv``: binds a scheduler
 (RELMAS checkpoint or named baseline), runs request episodes, and
 reports global + per-tenant SLA metrics — the serving-side analogue of
 ``launch/rl_train.py``'s training loop.
+
+Checkpoint policy: *generalist* checkpoints (``policy_kind:
+"generalist"`` in meta — the fleet-conditioned M-agnostic policy of
+``repro.core.generalist``) restore on ANY fleet whose ``num_sas`` fits
+the checkpoint's ``m_max`` (the env is padded, descriptors condition
+the weights); legacy per-fleet *specialist* checkpoints keep the
+shape-/fleet-aware refusal — a same-width fleet restores shape-clean
+but carries another platform's policy.
 """
 from __future__ import annotations
 
@@ -15,6 +23,8 @@ import numpy as np
 from repro.ckpt import restore_checkpoint
 from repro.core import baselines as BL
 from repro.core import policy as P
+from repro.core.generalist import (PaddedEnv, load_generalist_checkpoint,
+                                   make_generalist_period)
 from repro.core.rollout import make_baseline_period, make_policy_period, \
     run_episode
 from repro.costmodel.registry import Registry
@@ -42,16 +52,36 @@ class MultiTenantService:
                  ckpt_dir: str | None = None, hidden: int = 64,
                  env_cfg: EnvConfig | None = None,
                  arrivals: ArrivalConfig | None = None):
-        self.env = SchedulingEnv(registry, env_cfg or EnvConfig(),
-                                 arrivals)
+        env_cfg = env_cfg or EnvConfig()
         self.policy_name = policy
+        self.policy_kind = "heuristic" if policy != "relmas" else "specialist"
+        gen = (load_generalist_checkpoint(
+                   ckpt_dir, min_num_sas=registry.mas.num_sas,
+                   default_hidden=hidden)
+               if policy == "relmas" else None)
+        if gen is not None:
+            # fleet-conditioned generalist: pad this fleet's env to the
+            # checkpoint's m_max and serve it on ANY platform — the
+            # descriptors in the features carry the fleet identity (a
+            # failed weight restore only leaves the architecture
+            # untrained; load_generalist_checkpoint already warned)
+            params, pcfg, spec, _ = gen
+            self.env = PaddedEnv(registry, env_cfg, spec.m_max, arrivals)
+            self.policy_kind = "generalist"
+            self.params = params
+            self._period = make_generalist_period(self.env, pcfg)
+            return
+        self.env = SchedulingEnv(registry, env_cfg, arrivals)
         if policy == "relmas":
             pcfg = P.PolicyConfig(feat_dim=self.env.feat_dim,
                                   act_dim=self.env.act_dim, hidden=hidden)
             params = P.init_actor(jax.random.PRNGKey(0), pcfg)
+            # attempt the restore whenever a directory was given (even
+            # an empty one: the FileNotFoundError path must still warn)
             if ckpt_dir and os.path.isdir(ckpt_dir):
                 try:
                     restored, _, meta = restore_checkpoint(ckpt_dir, params)
+                    # legacy specialist checkpoints stay fleet-locked:
                     # same-width fleets restore shape-clean but carry
                     # another platform's policy — only accept a fleet
                     # match when both sides are named (checkpoints from

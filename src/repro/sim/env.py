@@ -26,6 +26,7 @@ rollout pipeline in ``repro.core.rollout`` is built on exactly this.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Any
 
@@ -90,6 +91,34 @@ class SchedulingEnv:
         self.feat_dim = 4 + 2 * self.num_sas
         self.act_dim = 1 + self.num_sas
         self.seq_len = cfg.max_rq + 1          # + primer
+
+    # ---------------- fleet tables as data ----------------
+    def bind_tables(self, *, lat=None, bw=None, en=None, min_lat=None,
+                    bandwidth_gbps=None) -> "SchedulingEnv":
+        """Functional shallow copy with characterization tables replaced.
+
+        The replacements may be **traced** arrays: every env method only
+        ever indexes/broadcasts the tables, so a jitted program can bind
+        per-round fleet tensors gathered from a stacked ``(K, ...)``
+        axis and run :meth:`episode` with the platform as *data* — one
+        compiled trace serves every fleet of equal padded shape (the
+        multi-fleet generalist trainer in ``repro.core.generalist``).
+        Shapes must match the originals; ``bandwidth_gbps`` rebinds the
+        resolved ``cfg.bandwidth_gbps`` (a scalar, traceable too).
+        """
+        env = copy.copy(self)
+        env._runner_cache = {}     # compiled-runner cache is per-binding
+        for name, val in (("lat", lat), ("bw", bw), ("en", en),
+                          ("min_lat", min_lat)):
+            if val is not None:
+                if val.shape != getattr(self, name).shape:
+                    raise ValueError(f"{name}: bound shape {val.shape} != "
+                                     f"{getattr(self, name).shape}")
+                setattr(env, name, val)
+        if bandwidth_gbps is not None:
+            env.cfg = dataclasses.replace(self.cfg,
+                                          bandwidth_gbps=bandwidth_gbps)
+        return env
 
     # ---------------- episode setup ----------------
     def init_state(self, trace: Trace) -> State:
