@@ -45,6 +45,20 @@ Acceptance bar for the fused-trainer PR: >= 3x periods/sec at the CI
 config.  ``--only train_throughput`` runs just this section (the CI
 regression guard does).
 
+``train_throughput`` additionally carries a ``devices`` scaling
+subsection: rounds/sec and periods/sec for the SAME chunk config at
+1/2/4 devices, each measured in a subprocess with
+``--xla_force_host_platform_device_count=N`` (the ``launch/dryrun.py``
+trick) — 1 device runs the plain fused chunk, N >= 2 the pmap-sharded
+chunk (``core.train.make_sharded_train_rounds``).  ``host_cores`` is
+recorded alongside: forced host devices *partition* the host's cores,
+so on a single-core machine the N-device arms serialize and
+``scaling_2dev`` measures sharding overhead, not speedup — the section
+exists to track scaling efficiency as a trajectory, and reads as a
+true scaling curve only where ``host_cores >= N`` (or on real
+multi-accelerator hosts).  ``--devices-probe N`` is the internal child
+mode that times one arm and prints a ``devices_probe,{json}`` line.
+
 The ``fleet_scaling`` section reports batched-rollout periods/sec per
 accelerator-fleet preset (``repro.costmodel.fleets``) — small (4-SA) vs
 paper (6-SA) vs large (8-SA) platforms, one compiled evaluator each.
@@ -62,6 +76,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -84,11 +99,12 @@ from repro.core import baselines as BL
 from repro.core import ddpg as D
 from repro.core import policy as P
 from repro.core.replay import (DeviceReplay, ReplayBuffer, replay_add,
-                               replay_init)
+                               replay_init, replay_pair_init)
 from repro.core.rollout import (make_baseline_episode_batch,
                                 make_policy_period, make_rollout_batch,
                                 run_episode, stack_episodes)
-from repro.core.train import make_train_rounds, round_keys
+from repro.core.train import (make_sharded_train_rounds, make_train_rounds,
+                              replicate, round_keys, shard_round_keys)
 from repro.sim import engine as engine_mod
 import repro.sim.env as env_mod
 
@@ -326,6 +342,113 @@ def run_train(*, rounds: int = 24, batch: int = 2, periods: int = 4,
     return res
 
 
+def run_devices_probe(ndev: int, *, rounds: int = 24, batch: int = 4,
+                      periods: int = 4, max_rq: int = 16, max_jobs: int = 8,
+                      hidden: int = 8, updates_per_round: int = 2,
+                      batch_size: int = 4, capacity: int = 8000,
+                      sigma0: float = 0.4, sigma_min: float = 0.05,
+                      sigma_decay: float = 0.97, seed: int = 0) -> dict:
+    """Time one fused chunk of ``rounds`` rounds at ``ndev`` devices.
+
+    Runs in a CHILD process forced to ``ndev`` host devices
+    (``run_train_devices`` spawns it); ``ndev == 1`` times the plain
+    fused chunk, ``ndev >= 2`` the pmap-sharded chunk with per-device
+    double-buffered rings.  Same round logic and global batch/update
+    sizes as :func:`run_train`'s AFTER arm (with ``batch`` raised so it
+    splits over 4 devices), so the 1-device row doubles as that arm's
+    twin.  Prints a ``devices_probe,{json}`` line for the parent.
+    """
+    assert len(jax.local_devices()) >= ndev, (ndev, jax.local_devices())
+    env = make_env("light", periods=periods, max_rq=max_rq,
+                   max_jobs=max_jobs)
+    pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
+                          hidden=hidden)
+    dcfg = D.DDPGConfig(policy=pcfg)
+    kw = dict(batch_episodes=batch, num_updates=updates_per_round,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay)
+    flags = jnp.ones((rounds,), bool)
+    keys = round_keys(seed + 1, 0, rounds)
+
+    if ndev == 1:
+        rounds_fn = make_train_rounds(env, dcfg, **kw)
+
+        def chunk():
+            state = D.init_ddpg(jax.random.PRNGKey(seed), dcfg)
+            buf = replay_init(capacity, env.seq_len, env.feat_dim,
+                              env.act_dim)
+            out = rounds_fn(state, buf, keys, jnp.float32(sigma0), flags)
+            jax.block_until_ready(out[3]["sla"])
+    else:
+        devs = jax.local_devices()[:ndev]
+        rounds_fn = make_sharded_train_rounds(env, dcfg, devices=devs, **kw)
+        dkeys = shard_round_keys(keys, ndev)
+        round_size = (batch // ndev) * periods
+
+        def chunk():
+            state = replicate(D.init_ddpg(jax.random.PRNGKey(seed), dcfg),
+                              devs)
+            pair = replicate(replay_pair_init(
+                replay_init(capacity // ndev, env.seq_len, env.feat_dim,
+                            env.act_dim), round_size), devs)
+            out = rounds_fn(state, pair, dkeys,
+                            replicate(jnp.float32(sigma0), devs), flags)
+            jax.block_until_ready(out[3]["sla"])
+
+    chunk()                                              # warmup/compile
+    t0 = time.perf_counter()
+    chunk()
+    secs = time.perf_counter() - t0
+    res = dict(devices=ndev, rounds=rounds, batch=batch,
+               rounds_per_sec=round(rounds / secs, 2),
+               periods_per_sec=round(rounds * batch * periods / secs, 1))
+    print("devices_probe," + json.dumps(res), flush=True)
+    return res
+
+
+def run_train_devices(counts=(1, 2, 4), *, rounds: int = 24,
+                      timeout: int = 900) -> dict:
+    """The ``train_throughput.devices`` scaling section.
+
+    Spawns one child per device count with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    the child imports jax — same trick as ``launch/dryrun.py``; the
+    module's own import-time flag guard yields to a pre-set value) and
+    collects each child's ``devices_probe`` record.  ``scaling_2dev``
+    is 2-device over 1-device rounds/sec; ``host_cores`` qualifies it —
+    forced host devices split the physical cores, so the ratio is a
+    real concurrency measure only when ``host_cores >= N``.
+    """
+    out: dict[str, dict] = {}
+    for n in counts:
+        env = {**os.environ,
+               "XLA_FLAGS": f"--xla_force_host_platform_device_count={n}",
+               "PYTHONPATH": os.pathsep.join(
+                   [os.path.join(REPO, "src"), REPO,
+                    os.environ.get("PYTHONPATH", "")])}
+        cmd = [sys.executable, "-m", "benchmarks.rollout_throughput",
+               "--devices-probe", str(n), "--train-rounds", str(rounds)]
+        r = subprocess.run(cmd, env=env, cwd=REPO, capture_output=True,
+                           text=True, timeout=timeout)
+        line = next((l for l in r.stdout.splitlines()
+                     if l.startswith("devices_probe,")), None)
+        if r.returncode != 0 or line is None:
+            raise RuntimeError(f"devices probe at {n} failed:\n"
+                               f"{r.stdout[-2000:]}{r.stderr[-2000:]}")
+        out[str(n)] = json.loads(line.split(",", 1)[1])
+    cores = os.cpu_count() or 1
+    res = dict(counts=out,
+               scaling_2dev=round(out["2"]["rounds_per_sec"]
+                                  / out["1"]["rounds_per_sec"], 2),
+               host_cores=cores,
+               note=("forced host devices partition the physical cores; "
+                     "with host_cores < N the N-device arms time-slice "
+                     "one core and scaling_2dev tracks sharding overhead "
+                     "rather than parallel speedup"))
+    print("train_devices," + json.dumps(res), flush=True)
+    return res
+
+
 def run_fleet_scaling(*, fleets=("2simba_2eyeriss", "paper6",
                                  "4simba_4eyeriss"),
                       batch: int = 8, repeats: int = 2, periods: int = 24,
@@ -408,6 +531,17 @@ def main(argv=None):
                          "guard runs --only train_throughput)")
     ap.add_argument("--train-rounds", type=int, default=24,
                     help="rounds per arm in the train_throughput section")
+    ap.add_argument("--devices-probe", type=int, default=0, metavar="N",
+                    help="internal child mode: time one fused chunk at N "
+                         "forced host devices, print devices_probe,{json} "
+                         "and exit (spawned by the devices scaling "
+                         "subsection)")
+    ap.add_argument("--device-counts", default="1,2,4",
+                    help="device counts for the train_throughput devices "
+                         "scaling subsection")
+    ap.add_argument("--no-devices", action="store_true",
+                    help="skip the devices scaling subsection (it spawns "
+                         "one subprocess per device count)")
     ap.add_argument("--train-batch", type=int, default=2,
                     help="episodes per round in the train_throughput "
                          "section (its own CI-sized env, like the "
@@ -418,6 +552,11 @@ def main(argv=None):
                          "(small vs large platforms)")
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_rollout.json"))
     args = ap.parse_args(argv)
+
+    if args.devices_probe:
+        # child mode: one timed arm, no out-file write
+        return run_devices_probe(args.devices_probe,
+                                 rounds=args.train_rounds)
 
     def want(section):
         if args.only is not None:
@@ -449,6 +588,10 @@ def main(argv=None):
     if want("train_throughput"):
         results["train_throughput"] = run_train(
             rounds=args.train_rounds, batch=args.train_batch)
+        if not args.no_devices:
+            counts = tuple(int(c) for c in args.device_counts.split(","))
+            results["train_throughput"]["devices"] = run_train_devices(
+                counts, rounds=args.train_rounds)
     if want("fleet_scaling"):
         results["fleet_scaling"] = run_fleet_scaling(
             fleets=tuple(args.fleets.split(",")))

@@ -41,6 +41,16 @@ if [ -z "${SKIP_TRAIN:-}" ]; then
     --updates-per-episode 2 --batch-size 8 --replay-capacity 64 \
     --warmup-episodes 2 --eval-every 100 --eval-seeds 2 \
     --outdir "$CI_TMP/relmas_smoke"
+  # sharded-trainer smoke: the same config pmap-sharded over 2 forced
+  # host devices (--devices 2: split collection, replicated update with
+  # pmean'd grads, per-device double-buffered rings; see
+  # docs/ARCHITECTURE.md "sharded round")
+  XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+  python -m repro.launch.rl_train --workload light --episodes 4 \
+    --batch-episodes 2 --periods 6 --max-rq 16 --max-jobs 8 --hidden 8 \
+    --updates-per-episode 2 --batch-size 8 --replay-capacity 64 \
+    --warmup-episodes 2 --eval-every 100 --eval-seeds 2 --devices 2 \
+    --outdir "$CI_TMP/relmas_sharded_smoke"
 fi
 # generalist smokes: (1) a 2-fleet --fleet training run (2 fused
 # fleet-sampling rounds: descriptor-conditioned policy, stacked fleet
@@ -72,7 +82,10 @@ fi
 # of the committed BENCH_rollout.json.  Absolute rounds/sec is machine-
 # dependent, so a failure requires BOTH the absolute fused rounds/sec
 # AND the machine-invariant fused/hostloop speedup (both arms measured
-# in the same fresh run) to regress >30%; SKIP_BENCH=1 skips
+# in the same fresh run) to regress >30%.  The devices subsection is
+# guarded the same way: its 2-device rounds/sec AND the machine-
+# invariant 2dev/1dev scaling ratio must both regress >30% to fail
+# (and the 1/2-device rows must be present); SKIP_BENCH=1 skips
 if [ -z "${SKIP_BENCH:-}" ]; then
   python -m benchmarks.rollout_throughput --only train_throughput \
     --out "$CI_TMP/BENCH_rollout_fresh.json"
@@ -88,5 +101,19 @@ if new < 0.7 * old and new_sp < 0.7 * old_sp:
     sys.exit(f"REGRESSION: fused trainer rounds/sec {new} < 70% of "
              f"committed {old} AND speedup {new_sp}x < 70% of "
              f"committed {old_sp}x")
+fd, cd = fresh.get("devices", {}), committed.get("devices", {})
+for row in ("1", "2"):
+    assert row in fd.get("counts", {}), \
+        f"devices scaling section missing {row}-device row: {fd}"
+if cd:
+    new2 = fd["counts"]["2"]["rounds_per_sec"]
+    old2 = cd["counts"]["2"]["rounds_per_sec"]
+    new_sc, old_sc = fd["scaling_2dev"], cd["scaling_2dev"]
+    print(f"devices guard: 2-dev rounds/sec {new2} vs committed {old2}; "
+          f"scaling_2dev {new_sc} vs committed {old_sc}")
+    if new2 < 0.7 * old2 and new_sc < 0.7 * old_sc:
+        sys.exit(f"REGRESSION: sharded 2-device rounds/sec {new2} < 70% "
+                 f"of committed {old2} AND scaling_2dev {new_sc} < 70% "
+                 f"of committed {old_sc}")
 PY
 fi

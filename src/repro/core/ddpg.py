@@ -107,7 +107,8 @@ def act(params: Params, cfg: P.PolicyConfig, feats, mask, key=None,
     return a, prio, sa
 
 
-def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch) -> tuple["DDPGState", dict]:
+def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch,
+                axis_name: str | None = None) -> tuple["DDPGState", dict]:
     """One DDPG update from a replay batch.
 
     batch: dict with s (B,T,F), mask (B,T), a (B,T-1,G), r (B,),
@@ -120,6 +121,15 @@ def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch) -> tuple["DDPGState", 
     ``M_max``-padding SAs so the critic's action input is
     fleet-invariant (``repro.core.generalist``); absent the key, the
     update is the plain DDPG step.
+
+    ``axis_name``: when set, the update runs replicated under a mapped
+    device axis (``pmap``/``vmap``) with the batch *sharded* — each
+    device contributes its local per-sample gradients and losses, which
+    are ``lax.pmean``'d across the axis before the Adam step.  Equal
+    per-device shards make the mean-of-means the global-batch mean, so
+    every device computes the identical updated state and replication is
+    preserved deterministically (the sharded round in
+    ``repro.core.train`` relies on this).
     """
     pc = cfg.policy
     bc_actor = jax.vmap(P.actor_apply, in_axes=(None, None, 0, 0))
@@ -138,6 +148,8 @@ def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch) -> tuple["DDPGState", 
         return jnp.mean((q - y) ** 2), q
 
     (closs, q), cgrads = jax.value_and_grad(critic_loss, has_aux=True)(state.critic)
+    if axis_name is not None:
+        cgrads = jax.lax.pmean(cgrads, axis_name)
     new_critic, new_copt = _adam_step(state.critic, cgrads, state.critic_opt,
                                       cfg.critic_lr, state.step, cfg.grad_clip)
 
@@ -146,6 +158,8 @@ def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch) -> tuple["DDPGState", 
         return -jnp.mean(bc_critic(new_critic, pc, batch["s"], a, batch["mask"]))
 
     aloss, agrads = jax.value_and_grad(actor_loss)(state.actor)
+    if axis_name is not None:
+        agrads = jax.lax.pmean(agrads, axis_name)
     new_actor, new_aopt = _adam_step(state.actor, agrads, state.actor_opt,
                                      cfg.actor_lr, state.step, cfg.grad_clip)
 
@@ -161,15 +175,17 @@ def ddpg_update(state: DDPGState, cfg: DDPGConfig, batch) -> tuple["DDPGState", 
     )
     info = {"critic_loss": closs, "actor_loss": aloss,
             "q_mean": jnp.mean(q), "target_mean": jnp.mean(y)}
+    if axis_name is not None:
+        info = jax.lax.pmean(info, axis_name)
     return new_state, info
 
 
-ddpg_update_jit = jax.jit(ddpg_update, static_argnames=("cfg",))
+ddpg_update_jit = jax.jit(ddpg_update, static_argnames=("cfg", "axis_name"))
 
 
 def ddpg_update_rounds(state: DDPGState, cfg: DDPGConfig, buf: dict, key,
-                       num_updates: int,
-                       batch_size: int) -> tuple[DDPGState, dict]:
+                       num_updates: int, batch_size: int,
+                       axis_name: str | None = None) -> tuple[DDPGState, dict]:
     """Pure ``num_updates``-step DDPG update scan (traceable body).
 
     Each scan step draws its own uniform replay sample keyed by a split
@@ -179,12 +195,17 @@ def ddpg_update_rounds(state: DDPGState, cfg: DDPGConfig, buf: dict, key,
     (num_updates,) axis.  Compose into larger jitted programs (the
     fused training round in ``repro.core.train``) or dispatch via
     :func:`ddpg_update_scan`.
+
+    Under a mapped device axis (``axis_name`` set), ``buf`` and ``key``
+    are per-device (local ring shard, device-folded key) while ``state``
+    is replicated; gradients are cross-device averaged per update (see
+    :func:`ddpg_update`) so the replicated state stays in lockstep.
     """
     keys = jax.random.split(key, num_updates)
 
     def step(st, k):
         batch = replay_sample(buf, k, batch_size)
-        return ddpg_update(st, cfg, batch)
+        return ddpg_update(st, cfg, batch, axis_name)
 
     return jax.lax.scan(step, state, keys)
 

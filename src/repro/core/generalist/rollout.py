@@ -34,6 +34,12 @@ def collect_generalist(env: PaddedEnv, pcfg: P.PolicyConfig, params,
     them per fleet index); exploration noise is drawn at the padded
     ``1 + M_max`` action width, padding channels masked after the
     clip exactly like the deterministic path.
+
+    Also safe under a mapped device axis (the sharded generalist round
+    pmaps it with a per-device episode shard): every shape is padded to
+    ``M_max`` regardless of which fleet the round bound, so the
+    per-device programs are identical even across mixed-fleet rounds —
+    the collection half shards embarrassingly with no collective.
     """
     return collect_episodes(
         env, pcfg, params, states, traces, key, sigma, collect,

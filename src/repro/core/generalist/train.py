@@ -31,7 +31,8 @@ from repro.core.generalist.env import PaddedEnv, stack_fleet_tables
 from repro.core.generalist.features import (GeneralistSpec,
                                             action_channel_mask)
 from repro.core.generalist.rollout import collect_generalist
-from repro.core.replay import replay_add, replay_init, replay_sample
+from repro.core.replay import (replay_add, replay_init, replay_pair_step,
+                               replay_sample)
 from repro.core.rollout import _runner_cache
 from repro.core.train import INFO_KEYS
 
@@ -70,16 +71,19 @@ def expand_batch(batch: dict, desc_all, sa_mask_all) -> dict:
 
 def generalist_update_rounds(state: D.DDPGState, dcfg: D.DDPGConfig,
                              buf: dict, desc_all, sa_mask_all, key,
-                             num_updates: int, batch_size: int):
+                             num_updates: int, batch_size: int,
+                             axis_name: str | None = None):
     """``ddpg_update_rounds`` with per-sample descriptor re-attachment:
     the whole sample -> expand -> update -> soft-target chain fuses
-    into one ``lax.scan`` (traceable body)."""
+    into one ``lax.scan`` (traceable body).  ``axis_name``: replicated
+    update under a mapped device axis with cross-device gradient
+    averaging (see ``repro.core.ddpg.ddpg_update``)."""
     keys = jax.random.split(key, num_updates)
 
     def step(st, k):
         batch = expand_batch(replay_sample(buf, k, batch_size),
                              desc_all, sa_mask_all)
-        return D.ddpg_update(st, dcfg, batch)
+        return D.ddpg_update(st, dcfg, batch, axis_name)
 
     return jax.lax.scan(step, state, keys)
 
@@ -189,3 +193,167 @@ def make_generalist_rounds(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
     rounds_fn = jax.jit(_scan, donate_argnums=(0, 1))
     cache[key_] = rounds_fn
     return rounds_fn
+
+
+# ---------------------------------------------------------------------------
+# multi-device sharded generalist rounds (pmap over a "dev" axis)
+# ---------------------------------------------------------------------------
+def _sharded_generalist_round_body(envs: list[PaddedEnv],
+                                   dcfg: D.DDPGConfig, *,
+                                   num_devices: int, batch_episodes: int,
+                                   num_updates: int, batch_size: int,
+                                   sigma_min: float, sigma_decay: float,
+                                   arrivals=None, axis_name: str = "dev"):
+    """Per-device generalist round body under a mapped ``axis_name``.
+
+    The sharded twin of ``repro.core.train._sharded_round_body`` with
+    one extra input: a per-round ``shared_key`` broadcast to every
+    device, from which the round's **fleet index** is drawn — all
+    devices collect on the same fleet each round, so the driver's fleet
+    log and the ring's ``fleet`` columns stay consistent with the
+    single-device schedule's semantics (one fleet per round).  Trace /
+    rollout / update keys come from the per-device key
+    (``shard_round_keys``); the update scan samples the local ``read``
+    ring (descriptors re-attached per sample) with cross-device
+    gradient averaging; the double-buffered ring pair carries the
+    ``fleet`` column like any other field.
+    """
+    template, K = envs[0], len(envs)
+    stack = stack_fleet_tables(envs)
+    pcfg = dcfg.policy
+    per_eps = batch_episodes // num_devices
+    per_bs = batch_size // num_devices
+    if per_eps * num_devices != batch_episodes:
+        raise ValueError(f"batch_episodes={batch_episodes} not divisible "
+                         f"by num_devices={num_devices}")
+    if per_bs * num_devices != batch_size:
+        raise ValueError(f"batch_size={batch_size} not divisible "
+                         f"by num_devices={num_devices}")
+
+    def round_fn(state: D.DDPGState, pair: dict, key, shared_key, sigma,
+                 do_update):
+        ktrace, kroll, kup = jax.random.split(key, 3)
+        f = jax.random.randint(shared_key, (), 0, K)
+        env_f = template.bind_tables(
+            lat=stack["lat"][f], bw=stack["bw"][f], en=stack["en"][f],
+            min_lat=stack["min_lat"][f],
+            bandwidth_gbps=stack["bandwidth"][f])
+        traces, states = env_f.new_episodes_jax(ktrace, per_eps, arrivals)
+        _, trans, einfos, mets = collect_generalist(
+            env_f, pcfg, state.actor, states, traces, kroll, sigma,
+            desc=stack["desc"][f], sa_mask=stack["sa_mask"][f])
+        flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in trans.items()}
+        flat["fleet"] = jnp.full((flat["r"].shape[0],), f, jnp.int32)
+
+        def upd(st):
+            st2, infos = generalist_update_rounds(
+                st, dcfg, pair["read"], stack["desc"], stack["sa_mask"],
+                kup, num_updates, per_bs, axis_name)
+            return st2, {k: infos[k][-1] for k in INFO_KEYS}
+
+        def no_upd(st):
+            return st, {k: jnp.zeros((), jnp.float32) for k in INFO_KEYS}
+
+        state, info = jax.lax.cond(do_update, upd, no_upd, state)
+        pair = replay_pair_step(pair, flat)
+        sigma = jnp.maximum(jnp.float32(sigma_min),
+                            sigma * sigma_decay ** batch_episodes)
+        pm = lambda x: jax.lax.pmean(x, axis_name)
+        metrics = dict(sla=pm(jnp.mean(mets["sla_rate"])),
+                       reward=pm(jnp.mean(einfos["reward"])),
+                       energy_uj=pm(jnp.mean(mets["energy_uj"])),
+                       sigma=sigma, did_update=do_update,
+                       fleet=f, **info)
+        return state, pair, sigma, metrics
+
+    return round_fn
+
+
+def _sharded_generalist_scan(round_fn):
+    def _scan(state, pair, keys, shared_keys, sigma, do_update):
+        def step(carry, xs):
+            st, pr, sg = carry
+            k, sk, du = xs
+            st, pr, sg, m = round_fn(st, pr, k, sk, sg, du)
+            return (st, pr, sg), m
+
+        (state, pair, sigma), metrics = jax.lax.scan(
+            step, (state, pair, sigma), (keys, shared_keys, do_update))
+        return state, pair, sigma, metrics
+
+    return _scan
+
+
+def make_sharded_generalist_rounds(envs: list[PaddedEnv],
+                                   dcfg: D.DDPGConfig, *, devices,
+                                   batch_episodes: int, num_updates: int,
+                                   batch_size: int, sigma_min: float,
+                                   sigma_decay: float, arrivals=None):
+    """A chunk of R fleet-sampling rounds sharded over ``devices``.
+
+    Returns ``rounds_fn(state, pair, keys, shared_keys, sigma,
+    do_update)`` -> ``(state, pair, sigma, metrics)``.  Same contract
+    as ``core.train.make_sharded_train_rounds`` (replicated donated
+    ``state``, per-device donated ring ``pair`` built over
+    :func:`generalist_replay_init`, ``keys`` (D, R, 2), replicated
+    ``sigma``, shared ``do_update`` (R,)) plus ``shared_keys`` — the
+    un-sharded (R, 2) round keys (``round_keys``) broadcast to every
+    device, from which each round's common fleet index is drawn.
+    ``metrics`` gains the per-round ``fleet`` entry, identical across
+    the device rows.
+    """
+    devices = tuple(devices)
+    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay, arrivals=arrivals)
+    key_ = _cache_key("sharded_generalist_rounds", dcfg, len(envs), kw) \
+        + (devices,)
+    cache = _runner_cache(envs[0])
+    if key_ not in cache:
+        round_fn = _sharded_generalist_round_body(
+            envs, dcfg, num_devices=len(devices), **kw)
+        cache[key_] = jax.pmap(_sharded_generalist_scan(round_fn),
+                               axis_name="dev", devices=devices,
+                               in_axes=(0, 0, 0, None, 0, None),
+                               donate_argnums=(0, 1))
+    return cache[key_]
+
+
+def sharded_generalist_rounds_reference(envs: list[PaddedEnv],
+                                        dcfg: D.DDPGConfig, *,
+                                        num_devices: int,
+                                        batch_episodes: int,
+                                        num_updates: int, batch_size: int,
+                                        sigma_min: float,
+                                        sigma_decay: float, arrivals=None):
+    """Single-device vmap oracle for
+    :func:`make_sharded_generalist_rounds` (same signature and (D, R)
+    output layout; the ``pmean`` collectives resolve identically under
+    ``vmap(axis_name="dev")``)."""
+    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay, arrivals=arrivals)
+    key_ = _cache_key("sharded_generalist_ref", dcfg, len(envs), kw) \
+        + (num_devices,)
+    cache = _runner_cache(envs[0])
+    if key_ not in cache:
+        round_fn = _sharded_generalist_round_body(
+            envs, dcfg, num_devices=num_devices, **kw)
+        vround = jax.vmap(round_fn, in_axes=(0, 0, 0, None, 0, None),
+                          axis_name="dev")
+
+        def _scan(state, pair, keys, shared_keys, sigma, do_update):
+            def step(carry, xs):
+                st, pr, sg = carry
+                k, sk, du = xs
+                st, pr, sg, m = vround(st, pr, k, sk, sg, du)
+                return (st, pr, sg), m
+
+            (state, pair, sigma), metrics = jax.lax.scan(
+                step, (state, pair, sigma),
+                (jnp.swapaxes(keys, 0, 1), shared_keys, do_update))
+            metrics = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), metrics)
+            return state, pair, sigma, metrics
+
+        cache[key_] = jax.jit(_scan, donate_argnums=(0, 1))
+    return cache[key_]

@@ -23,6 +23,23 @@ round), where the outer jit's own donation applies.
 (Sec. 4.2); sequences are fixed padded length T (= 1 primer + max_rq
 sub-jobs).
 
+For the multi-device sharded trainer (``repro.core.train``'s pmap'd
+round) the ring additionally comes in a **double-buffered pair**
+(:func:`replay_pair_init` / :func:`replay_pair_step`): each device
+holds a ``read`` ring (all transitions through round ``t-1`` — what
+round ``t``'s update scan samples) and a ``write`` ring absorbing
+round ``t``'s transitions.  Because the update's gathers and the
+collection's scatter touch *different* buffers, XLA is free to overlap
+round ``t``'s update sampling with the collection write — the
+aliasing hazard a single donated ring would impose is gone.  The cost
+is 2x ring memory and one-round-delayed sample visibility (an
+off-policy non-issue; the single-device fused round keeps the
+immediate-visibility single ring and remains the parity oracle).
+Ring-content invariant: after any number of steps the ``read`` ring is
+bit-identical to a single ring fed the same per-round batches
+(:func:`replay_add` in round order) — tested in
+``tests/test_train_sharded.py``.
+
 :class:`DeviceReplay` is a thin stateful wrapper over the functional
 ops; :class:`ReplayBuffer` is the legacy host-side NumPy ring kept for
 compatibility (examples, tests, non-JAX consumers).
@@ -83,6 +100,67 @@ def replay_add(buf: dict, batch: dict) -> dict:
 # donated jit: the ring scatter updates the buffer in place (input
 # buffers are invalidated — rebind to the return value)
 replay_add_batch = jax.jit(replay_add, donate_argnums=(0,))
+
+
+def replay_add_masked(buf: dict, batch: dict, n) -> dict:
+    """Ring-write only the first ``n`` rows of a stacked batch.
+
+    ``n`` may be traced (the double-buffer pair's carried-over
+    ``pending`` write is empty on the very first round and full-size
+    after); rows ``>= n`` scatter to index ``capacity`` — out of bounds
+    — and are dropped.  ``n <= capacity`` like :func:`replay_add`.
+    """
+    cap = buf["r"].shape[0]
+    rows = batch["r"].shape[0]
+    valid = jnp.arange(rows) < n
+    idx = jnp.where(valid, (buf["ptr"] + jnp.arange(rows)) % cap, cap)
+    out = {k: buf[k].at[idx].set(batch[k].astype(buf[k].dtype),
+                                 mode="drop")
+           for k in replay_fields(buf)}
+    out["ptr"] = ((buf["ptr"] + n) % cap).astype(jnp.int32)
+    out["size"] = jnp.minimum(buf["size"] + n, cap).astype(jnp.int32)
+    return out
+
+
+def replay_pair_init(buf: dict, round_size: int) -> dict:
+    """Wrap a fresh ring into a double-buffered pair.
+
+    ``buf`` is a freshly-initialized ring (:func:`replay_init` or a
+    consumer variant with extra per-transition fields — the pair ops
+    honour them uniformly); ``round_size`` is the fixed number of
+    transitions one training round writes (``episodes * periods``).
+    Layout: ``read`` (sampled by this round's updates), ``write``
+    (absorbs this round's batch), ``pending`` + ``pending_n`` (the
+    previous round's batch, replayed into the write ring next round so
+    both rings converge on the full history — see module docstring).
+    """
+    pending = {k: jnp.zeros((round_size,) + buf[k].shape[1:], buf[k].dtype)
+               for k in replay_fields(buf)}
+    return dict(read=buf, write=jax.tree.map(jnp.copy, buf),
+                pending=pending, pending_n=jnp.zeros((), jnp.int32))
+
+
+def replay_pair_step(pair: dict, flat: dict) -> dict:
+    """Advance the double-buffered pair one round.
+
+    The caller samples from ``pair["read"]`` (all data through round
+    ``t-1``) and independently calls this with round ``t``'s stacked
+    batch ``flat``: the write ring absorbs the carried ``pending``
+    batch (round ``t-1``'s, bringing it level with the read ring) and
+    then ``flat``; the rings then swap roles and ``flat`` becomes the
+    new ``pending``.  Each ring thus receives every round's batch
+    exactly once, in round order — the read ring is always bit-identical
+    to a single :func:`replay_add` ring fed the same batches.  Pure
+    function: compose into a donated jit (the fused sharded round does).
+    """
+    w = replay_add_masked(pair["write"], pair["pending"], pair["pending_n"])
+    w = replay_add(w, flat)
+    n = jnp.asarray(flat["r"].shape[0], jnp.int32)
+    # pending is carried through lax.scan — pin it to the ring dtypes so
+    # the carry pytree is invariant across rounds
+    pending = {k: flat[k].astype(pair["read"][k].dtype)
+               for k in replay_fields(pair["read"])}
+    return dict(read=w, write=pair["read"], pending=pending, pending_n=n)
 
 
 def _gather(buf: dict, idx) -> dict:

@@ -29,6 +29,22 @@ round for sigma decay + logging.  This module removes all of it:
   train_throughput`` instead reproduces the *pre-PR* driver loop
   (NumPy trace-gen, separate un-donated dispatches, per-round syncs).
 
+- :func:`make_sharded_train_rounds` shards the fused chunk over a
+  ``pmap`` device axis: the collection half (trace gen -> episode scan)
+  splits the episode batch embarrassingly across devices, the DDPG
+  update scan stays replicated (the policy is tiny) with per-device
+  gradients ``pmean``'d across the axis, and each device owns a
+  donated **double-buffered** replay ring pair
+  (``repro.core.replay.replay_pair_*``) so round ``t``'s update
+  sampling reads a different buffer than round ``t``'s collection
+  writes — no aliasing hazard serialises them.  Per-round keys fold in
+  the device index (:func:`shard_round_keys`) for decorrelated
+  exploration streams; ``--devices 1`` in the driver routes to the
+  plain :func:`make_train_rounds` path, which stays the numerical
+  parity oracle.  :func:`sharded_rounds_reference` is the same sharded
+  body under ``vmap`` (same ``axis_name`` collectives) — the
+  single-device oracle for pmap parity tests.
+
 Donation contract: the ``state`` and ``buf`` arguments of the returned
 callables are consumed — always rebind to the returned values (the
 driver in ``launch/rl_train.py`` does).  ``sigma`` stays a device
@@ -44,7 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ddpg as D
-from repro.core.replay import replay_add
+from repro.core.replay import replay_add, replay_pair_step
 from repro.core.rollout import _runner_cache, collect_episodes
 from repro.sim.env import SchedulingEnv
 
@@ -62,6 +78,18 @@ def round_keys(seed: int, start_round: int, num_rounds: int) -> jnp.ndarray:
     base = jax.random.PRNGKey(seed)
     return jax.vmap(lambda i: jax.random.fold_in(base, i))(
         jnp.arange(start_round, start_round + num_rounds))
+
+
+def shard_round_keys(keys: jnp.ndarray, num_devices: int) -> jnp.ndarray:
+    """Per-device per-round keys (num_devices, R, 2): each round key from
+    :func:`round_keys` additionally folds in the device index, so the
+    D exploration/trace streams of a sharded round are decorrelated
+    from each other while staying a pure function of (seed, round,
+    device) — resume at any round count or device count replays the
+    same per-device stream."""
+    return jax.vmap(
+        lambda d: jax.vmap(lambda k: jax.random.fold_in(k, d))(keys))(
+            jnp.arange(num_devices))
 
 
 def _round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
@@ -201,3 +229,180 @@ def train_rounds_host(env: SchedulingEnv, dcfg: D.DDPGConfig, state, buf,
         out.append(m)
     metrics = jax.tree.map(lambda *xs: jnp.stack(xs), *out)
     return state, buf, sigma, metrics
+
+
+# ---------------------------------------------------------------------------
+# multi-device sharded rounds (pmap over a "dev" axis)
+# ---------------------------------------------------------------------------
+def replicate(tree, devices):
+    """Copy a single-device pytree onto every device (leading D axis)."""
+    return jax.device_put_replicated(tree, list(devices))
+
+
+def unreplicate(tree):
+    """First replica of a replicated pytree — checkpoints and eval use
+    plain single-device arrays so restore is device-count-agnostic."""
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def _sharded_round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
+                        num_devices: int, batch_episodes: int,
+                        num_updates: int, batch_size: int,
+                        sigma_min: float, sigma_decay: float,
+                        arrivals=None, axis_name: str = "dev"):
+    """Per-device round body run under a mapped ``axis_name`` axis.
+
+    Each device collects ``batch_episodes // num_devices`` episodes with
+    its own device-folded key (embarrassingly parallel), runs the
+    replicated update scan on ``batch_size // num_devices`` local
+    samples with cross-device gradient averaging (``ddpg_update_rounds``
+    with ``axis_name``), and advances its private double-buffered ring
+    pair — the update samples the ``read`` ring while the round's fresh
+    transitions land in the ``write`` ring, so XLA may overlap the two
+    (see ``repro.core.replay``).  Sigma decays by the GLOBAL episode
+    count so the exploration schedule matches the single-device run.
+    Episode metrics are ``pmean``'d: every replica returns the global
+    round averages.
+    """
+    pcfg = dcfg.policy
+    per_eps = batch_episodes // num_devices
+    per_bs = batch_size // num_devices
+    if per_eps * num_devices != batch_episodes:
+        raise ValueError(f"batch_episodes={batch_episodes} not divisible "
+                         f"by num_devices={num_devices}")
+    if per_bs * num_devices != batch_size:
+        raise ValueError(f"batch_size={batch_size} not divisible "
+                         f"by num_devices={num_devices}")
+
+    def round_fn(state: D.DDPGState, pair: dict, key, sigma, do_update):
+        ktrace, kroll, kup = jax.random.split(key, 3)
+        traces, states = env.new_episodes_jax(ktrace, per_eps, arrivals)
+        _, trans, einfos, mets = collect_episodes(
+            env, pcfg, state.actor, states, traces, kroll, sigma)
+        flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in trans.items()}
+
+        def upd(st):
+            st2, infos = D.ddpg_update_rounds(st, dcfg, pair["read"], kup,
+                                              num_updates, per_bs,
+                                              axis_name)
+            return st2, {k: infos[k][-1] for k in INFO_KEYS}
+
+        def no_upd(st):
+            return st, {k: jnp.zeros((), jnp.float32) for k in INFO_KEYS}
+
+        state, info = jax.lax.cond(do_update, upd, no_upd, state)
+        pair = replay_pair_step(pair, flat)
+        sigma = jnp.maximum(jnp.float32(sigma_min),
+                            sigma * sigma_decay ** batch_episodes)
+        pm = lambda x: jax.lax.pmean(x, axis_name)
+        metrics = dict(sla=pm(jnp.mean(mets["sla_rate"])),
+                       reward=pm(jnp.mean(einfos["reward"])),
+                       energy_uj=pm(jnp.mean(mets["energy_uj"])),
+                       sigma=sigma, did_update=do_update, **info)
+        return state, pair, sigma, metrics
+
+    return round_fn
+
+
+def _sharded_scan(round_fn):
+    """Scan a per-device round body over the chunk's R rounds."""
+    def _scan(state, pair, keys, sigma, do_update):
+        def step(carry, xs):
+            st, pr, sg = carry
+            k, du = xs
+            st, pr, sg, m = round_fn(st, pr, k, sg, du)
+            return (st, pr, sg), m
+
+        (state, pair, sigma), metrics = jax.lax.scan(
+            step, (state, pair, sigma), (keys, do_update))
+        return state, pair, sigma, metrics
+
+    return _scan
+
+
+def make_sharded_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
+                              devices, batch_episodes: int,
+                              num_updates: int, batch_size: int,
+                              sigma_min: float, sigma_decay: float,
+                              arrivals=None):
+    """A chunk of R rounds sharded over ``devices`` in one pmap dispatch.
+
+    Returns ``rounds_fn(state, pair, keys, sigma, do_update)`` ->
+    ``(state, pair, sigma, metrics)`` where every array carries a
+    leading ``D = len(devices)`` axis except ``do_update`` (an (R,)
+    bool vector broadcast to all devices):
+
+    - ``state``: replicated ``DDPGState`` (:func:`replicate`); stays
+      bit-identical across replicas because gradients are cross-device
+      averaged before Adam — :func:`unreplicate` for checkpoints/eval;
+    - ``pair``: per-device double-buffered ring pairs
+      (``replay_pair_init`` then :func:`replicate` of a fresh pair —
+      device streams diverge as soon as the first round writes);
+    - ``keys``: (D, R, 2) from :func:`shard_round_keys`;
+    - ``sigma``: replicated (D,) scalar;
+    - ``metrics``: per-round dict stacked (D, R); episode metrics are
+      pmean'd so row 0 equals the global average.
+
+    ``state`` and ``pair`` are donated (rebind!).  Collection shards
+    over devices (``batch_episodes / D`` episodes each); the update
+    samples ``batch_size / D`` per device from the local read ring.
+    One compile per distinct (devices, R) — cached on the env.
+    """
+    devices = tuple(devices)
+    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay, arrivals=arrivals)
+    key_ = _cache_key("sharded_rounds", dcfg, kw) + (devices,)
+    cache = _runner_cache(env)
+    if key_ not in cache:
+        round_fn = _sharded_round_body(env, dcfg,
+                                       num_devices=len(devices), **kw)
+        cache[key_] = jax.pmap(_sharded_scan(round_fn), axis_name="dev",
+                               devices=devices,
+                               in_axes=(0, 0, 0, 0, None),
+                               donate_argnums=(0, 1))
+    return cache[key_]
+
+
+def sharded_rounds_reference(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
+                             num_devices: int, batch_episodes: int,
+                             num_updates: int, batch_size: int,
+                             sigma_min: float, sigma_decay: float,
+                             arrivals=None):
+    """Single-device vmap oracle for :func:`make_sharded_train_rounds`.
+
+    The SAME per-device round body mapped with ``jax.vmap(...,
+    axis_name="dev")`` instead of pmap — the ``pmean`` collectives
+    resolve identically, so on matching inputs the results must agree
+    up to XLA fusion-level float differences regardless of how many
+    physical devices exist.  Same signature and (D, R) output layout as
+    the pmap'd callable; runs on the default device.
+    """
+    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay, arrivals=arrivals)
+    key_ = _cache_key("sharded_rounds_ref", dcfg, kw) + (num_devices,)
+    cache = _runner_cache(env)
+    if key_ not in cache:
+        round_fn = _sharded_round_body(env, dcfg, num_devices=num_devices,
+                                       **kw)
+        vround = jax.vmap(round_fn, in_axes=(0, 0, 0, 0, None),
+                          axis_name="dev")
+
+        def _scan(state, pair, keys, sigma, do_update):
+            def step(carry, xs):
+                st, pr, sg = carry
+                k, du = xs
+                st, pr, sg, m = vround(st, pr, k, sg, du)
+                return (st, pr, sg), m
+
+            # scan over rounds: keys (D, R, 2) -> (R, D, 2) for the scan,
+            # metrics back to the pmap layout (D, R, ...)
+            (state, pair, sigma), metrics = jax.lax.scan(
+                step, (state, pair, sigma),
+                (jnp.swapaxes(keys, 0, 1), do_update))
+            metrics = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), metrics)
+            return state, pair, sigma, metrics
+
+        cache[key_] = jax.jit(_scan, donate_argnums=(0, 1))
+    return cache[key_]

@@ -30,6 +30,15 @@ Knobs:
 - ``--m-max M``           pad width for the generalist (0 = widest
   requested fleet; raise it to leave headroom for larger platforms);
 - ``--batch-episodes N``  episodes collected per training round;
+- ``--devices N``         shard each fused round (and chunk scan) over N
+  local devices via ``pmap``: collection splits the episode batch,
+  the tiny DDPG update replicates with cross-device-averaged
+  gradients, and each device owns a donated double-buffered replay
+  ring pair (``core.train.make_sharded_train_rounds``); composes with
+  chunked rounds, auto-resume, and checkpointing — checkpoints stay
+  single-device arrays, so a run may restore at any ``--devices``.
+  ``--devices 1`` (default) is the plain fused path and the numerical
+  parity oracle (``tests/test_train_sharded.py``);
 - ``--scenario NAME``     arrival-process preset (``default``,
   ``steady``, ``burst``, ``diurnal``, ``heavy_tail`` — see
   ``repro.sim.arrivals``; the fused round draws traces on device via
@@ -73,11 +82,14 @@ from repro.core.generalist import (GeneralistSpec, build_padded_envs,
                                    evaluate_generalist_batch,
                                    generalist_replay_init,
                                    make_generalist_round,
-                                   make_generalist_rounds)
-from repro.core.replay import replay_init
+                                   make_generalist_rounds,
+                                   make_sharded_generalist_rounds)
+from repro.core.replay import replay_init, replay_pair_init
 from repro.core.rollout import evaluate_batch, evaluate_batch_baseline
-from repro.core.train import (INFO_KEYS, make_train_round,
-                              make_train_rounds, round_keys)
+from repro.core.train import (INFO_KEYS, make_sharded_train_rounds,
+                              make_train_round, make_train_rounds,
+                              replicate, round_keys, shard_round_keys,
+                              unreplicate)
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.env import EnvConfig, SchedulingEnv
 from repro.workloads import build_registry
@@ -108,6 +120,9 @@ class TrainConfig:
     hidden: int = 64
     episodes: int = 150
     batch_episodes: int = 8
+    # shard each fused round over this many local devices (pmap; 1 =
+    # the single-device fused path, the numerical parity oracle)
+    devices: int = 1
     updates_per_episode: int = 30
     batch_size: int = 32
     replay_capacity: int = 4000
@@ -224,6 +239,29 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
             f"a collection round writes batch_episodes * periods = "
             f"{cfg.batch_episodes * cfg.periods} transitions, which must "
             f"fit --replay-capacity ({cfg.replay_capacity})")
+    if cfg.devices < 1:
+        raise ValueError(f"--devices must be >= 1, got {cfg.devices}")
+    if cfg.devices > 1:
+        # fail fast with actionable messages, not inside pmap tracing
+        ndev = jax.local_device_count()
+        if cfg.devices > ndev:
+            raise ValueError(
+                f"--devices {cfg.devices} exceeds jax.local_device_count()"
+                f" = {ndev}; use --devices {ndev} or fewer (on CPU, "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                f"exposes N host devices)")
+        for knob, val in (("batch-episodes", cfg.batch_episodes),
+                          ("batch-size", cfg.batch_size),
+                          ("replay-capacity", cfg.replay_capacity)):
+            if val % cfg.devices:
+                raise ValueError(f"--{knob} {val} must be divisible by "
+                                 f"--devices {cfg.devices} (equal shards)")
+        if cfg.episodes % cfg.batch_episodes:
+            raise ValueError(
+                f"--episodes {cfg.episodes} must be a multiple of "
+                f"--batch-episodes {cfg.batch_episodes} when sharding "
+                f"(a smaller tail round cannot split evenly over "
+                f"--devices {cfg.devices})")
     kind, fleets = _resolve_kind(cfg)
     ecfg, arr = _env_cfgs(cfg)
     if kind == "generalist":
@@ -305,19 +343,25 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
             baseline_scores[name] = {k: round(v, 4) for k, v in m.items()}
             log_fn(f"[baseline] {name} sla={m['sla_rate']:.4f}")
 
-    if len(jax.local_devices()) > 1:
-        # the fused round is vmap-only for now: collection no longer
-        # pmap-shards over local devices (see ROADMAP PR 3 notes —
-        # sharding moves *inside* the fused round when targeting real
-        # multi-accelerator hosts)
-        log_fn(f"[note] {len(jax.local_devices())} local devices; fused "
-               f"training rounds run on one (collection sharding is a "
-               f"ROADMAP follow-up)")
+    sharded = cfg.devices > 1
+    devs = jax.local_devices()[:cfg.devices]
+    if not sharded and len(jax.local_devices()) > 1:
+        # --devices N pmap-shards the fused round over N local devices
+        # (collection splits, the update replicates with pmean'd grads,
+        # per-device double-buffered rings; see docs/ARCHITECTURE.md
+        # "sharded round"); default is the single-device fused path
+        log_fn(f"[note] {len(jax.local_devices())} local devices; pass "
+               f"--devices N to shard the fused rounds over them")
 
-    buf = (generalist_replay_init(cfg.replay_capacity, env.seq_len, spec)
+    cap = cfg.replay_capacity // cfg.devices     # per-device ring shard
+    buf = (generalist_replay_init(cap, env.seq_len, spec)
            if kind == "generalist" else
-           replay_init(cfg.replay_capacity, env.seq_len, env.feat_dim,
-                       env.act_dim))
+           replay_init(cap, env.seq_len, env.feat_dim, env.act_dim))
+    if sharded:
+        # per-device double-buffered ring pair; checkpoints never hold
+        # replay, so restore stays device-count-agnostic
+        round_size = (cfg.batch_episodes // cfg.devices) * cfg.periods
+        buf = replicate(replay_pair_init(buf, round_size), devs)
     os.makedirs(cfg.outdir, exist_ok=True)
     logf = open(os.path.join(cfg.outdir, "log.jsonl"), "a")
     if baseline_scores:
@@ -337,6 +381,8 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
     if kind == "generalist":
         make_round = lambda **kw: make_generalist_round(envs, dcfg, **kw)
         make_rounds = lambda **kw: make_generalist_rounds(envs, dcfg, **kw)
+        make_sharded = lambda **kw: make_sharded_generalist_rounds(
+            envs, dcfg, devices=devs, **kw)
 
         def eval_policy_fn(params, seeds):
             """Mean metrics across every training fleet (+ per-fleet)."""
@@ -350,8 +396,17 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
     else:
         make_round = lambda **kw: make_train_round(env, dcfg, **kw)
         make_rounds = lambda **kw: make_train_rounds(env, dcfg, **kw)
+        make_sharded = lambda **kw: make_sharded_train_rounds(
+            env, dcfg, devices=devs, **kw)
         eval_policy_fn = lambda params, seeds: evaluate_batch(
             env, pcfg, params, seeds)
+
+    if sharded:
+        # learner state and sigma replicate once (and once more after
+        # any restore above); chunk boundaries unreplicate for
+        # eval/checkpointing so saved artifacts stay single-device
+        state = replicate(state, devs)
+        sigma = replicate(sigma, devs)
 
     ckpt_meta = dict(fleet=cfg.fleet, policy_kind=kind,
                      hidden=cfg.hidden, feat_dim=pcfg.feat_dim,
@@ -368,7 +423,19 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         flags = np.array([s + m > cfg.warmup_episodes for s, m in rounds])
         keys = round_keys(cfg.seed + 1, chunk["round0"], len(rounds))
         t0 = time.time()
-        if len(rounds) == 1:
+        if sharded:
+            # chunk sharded over the device axis: ONE pmap dispatch;
+            # keys fold in the device index, the generalist's fleet
+            # draw uses the shared (un-sharded) round keys
+            rounds_fn = make_sharded(**trainer_kw(n))
+            dkeys = shard_round_keys(keys, cfg.devices)
+            args = ((state, buf, dkeys, keys, sigma, jnp.asarray(flags))
+                    if kind == "generalist" else
+                    (state, buf, dkeys, sigma, jnp.asarray(flags)))
+            state, buf, sigma, mets = rounds_fn(*args)
+            # row 0 carries the pmean'd global round averages
+            mets = jax.tree.map(lambda x: np.asarray(x)[0], mets)
+        elif len(rounds) == 1:
             # single round (tail / tight cadence): one jitted dispatch
             round_fn = make_round(**trainer_kw(n))
             state, buf, sigma, mets = round_fn(state, buf, keys[0], sigma,
@@ -406,8 +473,9 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         # (the planner already decided which actions this chunk ends on)
         rs, rn = rounds[-1]
         ep = rs + rn - 1
+        st = unreplicate(state) if sharded else state
         if chunk["eval"]:
-            ev = eval_policy_fn(state.actor,
+            ev = eval_policy_fn(st.actor,
                                 seeds=range(7000, 7000 + cfg.eval_seeds))
             history[-1]["eval_sla"] = round(ev["sla_rate"], 4)
             evrec = {"episode": ep, "eval_sla": history[-1]["eval_sla"]}
@@ -424,12 +492,15 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                 best = {**ev, "episode": ep, "score": score}
                 mgr_best = CheckpointManager(
                     os.path.join(cfg.outdir, "best"), keep=1)
-                mgr_best.save(ep, state.actor,
+                mgr_best.save(ep, st.actor,
                               dict(episode=ep, sla=ev["sla_rate"],
                                    **ckpt_meta))
         if chunk["ckpt"]:
-            mgr.save(ep, state, dict(episode=ep, **ckpt_meta))
+            # single-device arrays: restore works at any --devices
+            mgr.save(ep, st, dict(episode=ep, **ckpt_meta))
     logf.close()
+    if sharded:
+        state = unreplicate(state)
     return dict(best=best, history=history, env=env, pcfg=pcfg, state=state,
                 baselines=baseline_scores, policy_kind=kind, fleets=fleets,
                 spec=spec)
@@ -452,6 +523,12 @@ _HELP = {
     "scenario": "arrival preset: default | steady | burst | diurnal | "
                 "heavy_tail (sim.arrivals)",
     "batch_episodes": "episodes collected per fused training round",
+    "devices": "shard each fused round over N local devices (pmap: "
+               "collection splits, update replicates with pmean'd grads, "
+               "per-device double-buffered replay rings); requires "
+               "batch-episodes/batch-size/replay-capacity divisible by N "
+               "and N <= jax.local_device_count(); 1 = single-device "
+               "fused path (parity oracle)",
     "eval_baselines": 'comma list scored on the eval seeds before '
                       'training, e.g. "fcfs,herald,magma" ("" = skip)',
     "fail_at": "inject a crash at this episode (fault-tolerance tests)",
