@@ -23,7 +23,10 @@ host-loop MAGMA, the fused trainer, and small-vs-large fleet scaling);
 ``benchmarks/transfer.py`` writes ``BENCH_transfer.json`` (the
 fleets x fleets cross-fleet transfer matrix: generalist vs per-fleet
 specialist vs untrained, all policies trained in-suite — ``--fleets``
-selects the platforms).
+selects the platforms); ``benchmarks/serving_bench.py`` writes
+``BENCH_serving.json`` (batched single-dispatch serving tick vs the
+per-period host loop: p50/p99 decision latency, sustained requests/sec,
+bit-exact SLA parity, and SLA-under-load per arrival scenario x rate).
 """
 from __future__ import annotations
 
@@ -37,7 +40,7 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig4,fig5,table1,policy,"
-                         "straggler,roofline,sweep,transfer")
+                         "serving,straggler,roofline,sweep,transfer")
     ap.add_argument("--no-magma", action="store_true",
                     help="skip the GA baseline (slowest bench)")
     ap.add_argument("--fleets", default=None,
@@ -59,6 +62,13 @@ def main(argv=None):
     if want("policy"):
         from benchmarks import policy_latency
         results["policy_latency"] = policy_latency.run()
+        results["serving_dispatch"] = policy_latency.run_serving()
+    if want("serving"):
+        from benchmarks import serving_bench
+        svc = serving_bench.make_service()
+        streams = 96 if not quick else 16
+        results["serving"] = serving_bench.run_guard(
+            svc, streams=streams, repeats=5 if not quick else 2)["throughput"]
     if want("fig5"):
         from benchmarks import fig5_overhead
         results["fig5"] = fig5_overhead.run(quick=quick)["summary"]

@@ -117,3 +117,57 @@ if cd:
                  f"of committed {old_sc}")
 PY
 fi
+# serving bench: (1) loadgen smoke — one scenario at low rate through
+# the batched single-dispatch tick (8 streams, ~1 min) with a
+# cell-presence + bit-parity check; (2) regression guard at the
+# committed config (96 streams): the acceptance conditions (batched
+# tick >= 5x host-loop requests/sec AND bit-equal SLA on the same
+# workloads) must hold fresh, and the requests/sec + p99-latency rows
+# must stay within 30% of the committed BENCH_serving.json — absolute
+# numbers are machine-dependent, so each row fails only when BOTH the
+# absolute value AND its machine-invariant ratio (speedup /
+# latency_ratio, both arms measured in the same fresh run) regress
+# >30%.  SKIP_SERVING=1 skips both.
+if [ -z "${SKIP_SERVING:-}" ]; then
+  python -m benchmarks.serving_bench --smoke \
+    --out "$CI_TMP/BENCH_serving_smoke.json"
+  python - "$CI_TMP/BENCH_serving_smoke.json" <<'PY'
+import json, sys
+res = json.load(open(sys.argv[1]))
+cells = res["scenarios"]["cells"]
+assert "steady/0.5" in cells, f"missing loadgen cell: {sorted(cells)}"
+assert cells["steady/0.5"]["counted"] > 0, cells["steady/0.5"]
+assert res["guard"]["throughput"]["sla_equal"], \
+    f"batched tick lost bit-parity: {res['guard']['throughput']}"
+print(f"serving smoke: {len(cells)} loadgen cell(s), parity OK")
+PY
+  python -m benchmarks.serving_bench --only guard \
+    --out "$CI_TMP/BENCH_serving_fresh.json"
+  python - "$CI_TMP/BENCH_serving_fresh.json" <<'PY'
+import json, sys
+fresh = json.load(open(sys.argv[1]))["guard"]
+committed = json.load(open("BENCH_serving.json"))["guard"]
+ft, ct = fresh["throughput"], committed["throughput"]
+fl, cl = fresh["decision_latency"], committed["decision_latency"]
+assert ft["sla_equal"], \
+    f"batched tick lost bit-parity with the host loop: {ft}"
+assert ft["meets_5x"], \
+    f"batched tick below 5x acceptance bar: {ft['speedup']}x " \
+    f"({ft['rps_batched']} vs {ft['rps_host']} req/s)"
+print(f"serving guard: rps {ft['rps_batched']} vs committed "
+      f"{ct['rps_batched']}; speedup {ft['speedup']}x vs "
+      f"{ct['speedup']}x; tick p99 {fl['tick_p99_us']}us vs "
+      f"{cl['tick_p99_us']}us")
+if ft["rps_batched"] < 0.7 * ct["rps_batched"] \
+        and ft["speedup"] < 0.7 * ct["speedup"]:
+    sys.exit(f"REGRESSION: batched requests/sec {ft['rps_batched']} < "
+             f"70% of committed {ct['rps_batched']} AND speedup "
+             f"{ft['speedup']}x < 70% of committed {ct['speedup']}x")
+if fl["tick_p99_us"] > cl["tick_p99_us"] / 0.7 \
+        and fl["latency_ratio"] > cl["latency_ratio"] / 0.7:
+    sys.exit(f"REGRESSION: tick p99 {fl['tick_p99_us']}us > 1/0.7x "
+             f"committed {cl['tick_p99_us']}us AND latency ratio "
+             f"{fl['latency_ratio']} > 1/0.7x committed "
+             f"{cl['latency_ratio']}")
+PY
+fi

@@ -1,0 +1,169 @@
+"""Single-dispatch serving ticks: the scheduler as a batched service.
+
+The serving analogue of ``repro.core.train``'s fused training rounds:
+where ``serving/service.py``'s host loop used to pay one dispatch per
+period per stream (plus host-side request bookkeeping between), ONE
+jitted, donated call now advances ``streams`` independent serving
+queues a full scheduling period each:
+
+    admit (masked scatter of up to K staged requests per stream)
+      -> batched policy inference + contention sim (``env.period``:
+         every pending sub-job of every tenant in one actor pass)
+      -> retire (drain completed jobs into cumulative SLA accumulators,
+         free their slots)
+
+vmapped over the stream axis inside a single ``jax.jit`` with the queue
+pytree donated — the device boundary is crossed once per tick: the
+``(S, K)`` staging buffers go in, a compact fixed-shape completion
+record comes out.  Episode transitions are never materialized (the
+tick returns no ``trans``, XLA dead-code-eliminates the collection).
+
+Act adapters reproduce the per-period reference paths *bit-for-bit* at
+``sigma = 0``: the specialist matches ``rollout.make_policy_period``,
+the generalist matches ``generalist.make_generalist_period`` (zero
+noise through the same clip/mask pipeline), heuristics call the
+``baselines`` functions unchanged — so a queue fed a replayed trace
+retires the exact SLA numbers of ``MultiTenantService.
+serve_episode_host`` on that trace (``tests/test_serving_batched.py``).
+
+Works on any :class:`~repro.sim.env.SchedulingEnv`, including
+:class:`~repro.core.generalist.env.PaddedEnv` (the generalist adapter
+reads the env's ``descriptors``/``sa_mask``) and table-bound envs
+(``bind_tables`` — tables are data to the tick like everywhere else).
+
+Compiled ticks are cached per env instance, keyed on (kind, pcfg,
+streams, K) exactly like the rollout runners.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy as P
+from repro.core.rollout import _runner_cache
+from repro.serving.queue import (queue_admit, queue_init, queue_metrics,
+                                 queue_retire)
+from repro.sim.env import SchedulingEnv
+
+
+def queue_init_batch(env: SchedulingEnv, streams: int) -> dict:
+    """``streams`` empty queues, tree-stacked over a leading (S,) axis."""
+    one = queue_init(env)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (streams,) + x.shape), one)
+
+
+def specialist_act(pcfg: P.PolicyConfig):
+    """Deterministic RELMAS actor — bit-identical to
+    ``make_policy_period``'s act_fn at ``sigma = 0`` (no clip)."""
+    def act(params, feats, mask, slots, st, key):
+        a = P.actor_apply(params, pcfg, feats, mask)
+        return a, a[:, 0], jnp.argmax(a[:, 1:], axis=-1).astype(jnp.int32)
+    return act
+
+
+def generalist_act(env, pcfg: P.PolicyConfig):
+    """Descriptor-conditioned actor — bit-identical to
+    ``make_generalist_period`` at ``sigma = 0`` (zero noise through the
+    same clip + channel mask)."""
+    from repro.core.generalist.features import generalist_act_fn
+    desc, sa_mask = env.descriptors, env.sa_mask
+    zero = jnp.zeros((env.cfg.max_rq, pcfg.act_dim))
+
+    def act(params, feats, mask, slots, st, key):
+        return generalist_act_fn(params, pcfg, desc, sa_mask)(
+            feats, mask, slots, st, key, zero)
+    return act
+
+
+def baseline_act(env, baseline_fn):
+    """Heuristic baselines act on raw slot data; ``params`` unused."""
+    def act(params, feats, mask, slots, st, key):
+        return baseline_fn(slots, st, env, key)
+    return act
+
+
+def _build_act(env, kind: str, pcfg, baseline_fn):
+    if kind == "specialist":
+        return specialist_act(pcfg)
+    if kind == "generalist":
+        return generalist_act(env, pcfg)
+    if kind == "heuristic":
+        if baseline_fn is None:
+            raise ValueError("kind='heuristic' needs baseline_fn")
+        return baseline_act(env, baseline_fn)
+    raise ValueError(f"unknown serving policy kind {kind!r}")
+
+
+def make_serving_tick(env: SchedulingEnv, *, kind: str = "specialist",
+                      pcfg: P.PolicyConfig | None = None,
+                      baseline_fn=None, streams: int = 1):
+    """Build the jitted single-dispatch scheduling tick.
+
+    Returns ``tick(params, queues, adm, key) -> (queues, out)`` where
+    ``queues`` is a :func:`queue_init_batch` pytree (DONATED — rebind to
+    the return value), ``adm`` stacks per-stream ``pack_admissions``
+    buffers over the leading (S,) axis, and ``out`` carries per-stream
+    fixed-shape results: the retire record (``completed``/``rid``/
+    ``hit``/``missed``/``finish_us``/``depth``), ``n_admitted``, the
+    period's committed-SJ count, and the post-tick sim clock ``t_us``.
+    ``params`` is the actor pytree (``None``-like empty for heuristics).
+    """
+    key_ = ("serving_tick", kind, pcfg, baseline_fn, streams)
+    cache = _runner_cache(env)
+    if key_ in cache:
+        return cache[key_]
+    act = _build_act(env, kind, pcfg, baseline_fn)
+
+    def one(params, qs, adm, key):
+        qs, n_adm = queue_admit(env, qs, adm)
+        # commit_only: the tick discards the transition, so the engine
+        # may stop at the period-boundary start horizon — committed
+        # results (and therefore all queue state) stay bit-identical
+        state, _, info = env.period(
+            qs["state"], qs["trace"],
+            lambda feats, mask, slots, st: act(params, feats, mask,
+                                               slots, st, key),
+            commit_only=True)
+        qs, out = queue_retire(env, {**qs, "state": state})
+        out.update(n_admitted=n_adm, committed=info["committed"],
+                   t_us=state["t"])
+        return qs, out
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def tick(params, queues, adm, key):
+        return jax.vmap(one, in_axes=(None, 0, 0, 0))(
+            params, queues, adm, jax.random.split(key, streams))
+
+    cache[key_] = tick
+    return tick
+
+
+def make_serving_flush(env: SchedulingEnv, streams: int = 1):
+    """Jitted end-of-stream drain: a final drop pass at the current sim
+    time (the batched twin of the reference path's closing
+    ``mark_drops``), one last retire, and the cumulative metrics.
+
+    Returns ``flush(queues) -> (queues, out)``; ``out`` is the retire
+    record plus :func:`queue_metrics` fields, everything stacked over
+    the stream axis.  Queues are donated like the tick's.
+    """
+    key_ = ("serving_flush", streams)
+    cache = _runner_cache(env)
+    if key_ in cache:
+        return cache[key_]
+
+    def one(qs):
+        state = env.mark_drops(qs["state"], qs["trace"], qs["state"]["t"])
+        qs, out = queue_retire(env, {**qs, "state": state})
+        out.update(queue_metrics(qs))
+        return qs, out
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def flush(queues):
+        return jax.vmap(one)(queues)
+
+    cache[key_] = flush
+    return flush

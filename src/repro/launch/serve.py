@@ -5,11 +5,24 @@ chosen policy and reports global + per-tenant SLA satisfaction.
 Tenants: the paper's CNN zoo (Table 2 workloads) and/or the 10 assigned
 LM architectures (llm_zoo layerization).
 
+Two serving modes:
+
+- default: per-episode host loop (``serve_episode_host``) — one full
+  trace per episode, per-tenant SLA breakdown printed per episode;
+- ``--batched``: the device-resident batched path (``serve_stream``) —
+  ``--streams`` concurrent request streams drawn by the
+  ``serving.loadgen`` scenario generator (``--scenario``/
+  ``--rate-scale``/``--requests``) and served by ONE jitted scheduling
+  tick per period across all streams; prints aggregate SLA plus the
+  serving telemetry (tick p50 wall time, deferrals, queue depth).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --workload mixed \
       --policy relmas --ckpt runs/mixed_medium/best
   PYTHONPATH=src python -m repro.launch.serve --workload lm_mixed \
       --policy herald --episodes 3
+  PYTHONPATH=src python -m repro.launch.serve --workload light \
+      --batched --streams 32 --scenario burst --rate-scale 1.5
 """
 from __future__ import annotations
 
@@ -47,6 +60,32 @@ def build_service(args) -> MultiTenantService:
                               env_cfg=ecfg, arrivals=arr)
 
 
+def serve_batched(svc: MultiTenantService, args) -> dict:
+    """Drive the device-resident batched path on loadgen traffic."""
+    from repro.serving.loadgen import LoadGenConfig, request_streams
+    lg = LoadGenConfig(scenario=args.scenario, rate_scale=args.rate_scale,
+                       n_requests=args.requests,
+                       qos_factor=args.qos_factor, qos_level=args.qos)
+    reqs = request_streams(svc.env, lg, args.streams, seed=9000)
+    res = svc.serve_stream(reqs, tick_k=args.tick_k, seed=9000)
+    agg, st = res["aggregate"], res["stats"]
+    tick_p50 = float(np.median(st["tick_wall_us"]))
+    print(f"[serve batched] streams={args.streams} "
+          f"scenario={args.scenario} rate={args.rate_scale} "
+          f"sla={agg['sla_rate']:.3f} jobs={agg['counted']} "
+          f"energy={agg['energy_uj']:.0f}uJ")
+    print(f"    ticks={st['ticks']} tick_p50={tick_p50:.0f}us "
+          f"admitted={st['admitted']} deferred={st['deferred']} "
+          f"unserved={st['unserved']} mean_depth={st['mean_depth']:.1f}")
+    out = {"policy": args.policy, "workload": args.workload,
+           "scenario": args.scenario, "rate_scale": args.rate_scale,
+           "streams": args.streams, "sla_rate": agg["sla_rate"],
+           "counted": agg["counted"], "deferred": st["deferred"],
+           "tick_p50_us": tick_p50}
+    print(json.dumps(out))
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="mixed",
@@ -73,9 +112,28 @@ def main(argv=None):
     ap.add_argument("--phase", default="decode",
                     choices=["decode", "prefill"])
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batched", action="store_true",
+                    help="serve loadgen streams through the batched "
+                         "single-dispatch tick instead of per-episode "
+                         "host loops")
+    ap.add_argument("--streams", type=int, default=16,
+                    help="concurrent request streams (--batched)")
+    ap.add_argument("--tick-k", type=int, default=8,
+                    help="max admissions per stream per tick (--batched)")
+    ap.add_argument("--scenario", default="steady",
+                    choices=["default", "steady", "burst", "diurnal",
+                             "heavy_tail"],
+                    help="loadgen arrival scenario (--batched)")
+    ap.add_argument("--rate-scale", type=float, default=1.0,
+                    help="offered-load multiplier on the calibrated "
+                         "base arrival rate (--batched)")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="requests per stream (--batched)")
     args = ap.parse_args(argv)
 
     svc = build_service(args)
+    if args.batched:
+        return serve_batched(svc, args)
     rates, energies = [], []
     for ep in range(args.episodes):
         m = svc.run_episode(seed=9000 + ep)

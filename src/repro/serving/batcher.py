@@ -1,5 +1,13 @@
 """Continuous batcher: real-model serving of batched requests.
 
+The DATA plane of the serving stack: where the control plane
+(``serving.queue`` + ``repro.core.serve``'s batched scheduling tick)
+decides *which* tenant's job runs *where*, this module runs actual
+token generation for the LM workloads.  Its fixed-slot design is the
+same shape as the control plane's device-resident request queue —
+preallocated slots, validity masks, admission into free slots —
+applied to KV-cache state instead of scheduler state.
+
 Fixed-slot continuous batching (vLLM-style, sized for this repo's CPU
 demo): ``n_slots`` concurrent sequences share one jitted decode step;
 new requests are prefilled into free slots; finished sequences free

@@ -1,9 +1,22 @@
 """Multi-tenant scheduling service: policy x registry x environment.
 
-Thin deployment wrapper over ``sim.SchedulingEnv``: binds a scheduler
-(RELMAS checkpoint or named baseline), runs request episodes, and
-reports global + per-tenant SLA metrics — the serving-side analogue of
-``launch/rl_train.py``'s training loop.
+Deployment wrapper over ``sim.SchedulingEnv`` with two serving paths:
+
+- :meth:`MultiTenantService.serve_stream` — the device-resident batched
+  path: ``streams`` independent request queues live on device
+  (``serving.queue``), and ONE jitted, donated scheduling tick
+  (``repro.core.serve.make_serving_tick``) per period admits staged
+  requests (masked scatter), runs batched policy inference over every
+  pending sub-job of every tenant, advances the contention sim, and
+  retires completed jobs — the host crosses the device boundary once
+  per tick, staging ``(S, K)`` admission buffers in and draining a
+  compact completion record out.  Fed by ``serving.loadgen`` streams.
+
+- :meth:`MultiTenantService.serve_episode_host` — the per-period
+  host-loop reference (one dispatch per period, full trace known
+  upfront): kept as the numerical parity oracle (the batched path is
+  bit-identical on a replayed trace — ``tests/test_serving_batched.py``)
+  and as the "before" arm of ``benchmarks/serving_bench.py``.
 
 Checkpoint policy: *generalist* checkpoints (``policy_kind:
 "generalist"`` in meta — the fleet-conditioned M-agnostic policy of
@@ -16,6 +29,7 @@ but carries another platform's policy.
 from __future__ import annotations
 
 import os
+import time
 
 import jax
 import numpy as np
@@ -28,12 +42,19 @@ from repro.core.generalist import (PaddedEnv, load_generalist_checkpoint,
 from repro.core.rollout import make_baseline_period, make_policy_period, \
     run_episode
 from repro.costmodel.registry import Registry
+from repro.serving.request import Request, resolve_request
 from repro.sim.arrivals import ArrivalConfig
+from repro.sim.engine import INF
 from repro.sim.env import EnvConfig, SchedulingEnv
 
 
 def per_tenant_metrics(env: SchedulingEnv, state, trace) -> dict[str, dict]:
-    """SLA breakdown by tenant (model id) for one finished episode."""
+    """SLA breakdown by tenant (model id) for one finished episode.
+
+    Tenants with zero counted jobs report ``sla_rate: None`` (no data —
+    distinct from 0.0, which means "all jobs missed"); the per-tenant
+    ``jobs`` counts sum to the episode's counted total.
+    """
     model = np.asarray(trace["model"])
     arrived = np.asarray(trace["arrival"]) < 1e29
     hit = np.asarray(state["hit"])
@@ -47,6 +68,17 @@ def per_tenant_metrics(env: SchedulingEnv, state, trace) -> dict[str, dict]:
     return out
 
 
+def _tenant_table(model_names, ten_counted, ten_hit) -> dict[str, dict]:
+    """Per-tenant table from the queue accumulators — same int-ratio
+    arithmetic as :func:`per_tenant_metrics` (bit-identical floats)."""
+    out = {}
+    for mid, name in enumerate(model_names):
+        n = int(ten_counted[mid])
+        out[name] = {"jobs": n,
+                     "sla_rate": float(int(ten_hit[mid]) / n) if n else None}
+    return out
+
+
 class MultiTenantService:
     def __init__(self, registry: Registry, *, policy: str = "relmas",
                  ckpt_dir: str | None = None, hidden: int = 64,
@@ -55,6 +87,8 @@ class MultiTenantService:
         env_cfg = env_cfg or EnvConfig()
         self.policy_name = policy
         self.policy_kind = "heuristic" if policy != "relmas" else "specialist"
+        self.pcfg = None
+        self._baseline_fn = None
         gen = (load_generalist_checkpoint(
                    ckpt_dir, min_num_sas=registry.mas.num_sas,
                    default_hidden=hidden)
@@ -69,6 +103,7 @@ class MultiTenantService:
             self.env = PaddedEnv(registry, env_cfg, spec.m_max, arrivals)
             self.policy_kind = "generalist"
             self.params = params
+            self.pcfg = pcfg
             self._period = make_generalist_period(self.env, pcfg)
             return
         self.env = SchedulingEnv(registry, env_cfg, arrivals)
@@ -100,15 +135,35 @@ class MultiTenantService:
                     print(f"[service] checkpoint incompatible ({e}); "
                           f"using untrained policy")
             self.params = params
+            self.pcfg = pcfg
             self._period = make_policy_period(self.env, pcfg)
         else:
-            fn = BL.BASELINES[policy]
+            self._baseline_fn = BL.BASELINES[policy]
             self.params = None
-            self._period = make_baseline_period(self.env, fn)
+            self._period = make_baseline_period(self.env, self._baseline_fn)
 
-    def run_episode(self, seed: int = 0) -> dict:
+    # ------------------------------------------------------------------
+    # host-loop reference path (one dispatch per period, trace upfront)
+    # ------------------------------------------------------------------
+    def serve_episode_host(self, seed: int = 0) -> dict:
+        """Run one freshly-drawn full-trace episode through the
+        per-period host loop (draws the trace, then
+        :meth:`serve_trace_host`)."""
         rng = np.random.default_rng(seed)
         trace, state = self.env.new_episode(rng)
+        return self.serve_trace_host(trace, state, seed=seed)
+
+    def serve_trace_host(self, trace, state=None, *, seed: int = 0) -> dict:
+        """Serve one episode trace through the per-period host loop.
+
+        One dispatch per period, the whole trace known upfront — the
+        numerical reference for :meth:`serve_stream` (bit-identical SLA
+        + per-tenant metrics on the same workload, see
+        ``loadgen.requests_to_trace``) and the "before" arm of
+        ``benchmarks/serving_bench.py``.
+        """
+        if state is None:
+            state = self.env.init_state(trace)
         key = jax.random.PRNGKey(seed)
         for _ in range(self.env.cfg.periods):
             if self.params is not None:
@@ -122,3 +177,148 @@ class MultiTenantService:
                    self.env.metrics(state, trace).items()}
         metrics["per_tenant"] = per_tenant_metrics(self.env, state, trace)
         return metrics
+
+    # kept name: external callers/tests predate the batched path
+    run_episode = serve_episode_host
+
+    # ------------------------------------------------------------------
+    # device-resident batched path (one dispatch per tick, all streams)
+    # ------------------------------------------------------------------
+    def _tick_fns(self, streams: int):
+        # deferred import: repro.core.serve imports serving.queue, which
+        # initializes this package — a module-level import here would
+        # close the cycle during interpreter bootstrap
+        from repro.core.serve import (make_serving_flush, make_serving_tick,
+                                      queue_init_batch)
+        tick = make_serving_tick(self.env, kind=self.policy_kind,
+                                 pcfg=self.pcfg,
+                                 baseline_fn=self._baseline_fn,
+                                 streams=streams)
+        flush = make_serving_flush(self.env, streams)
+        return tick, flush, queue_init_batch(self.env, streams)
+
+    def serve_stream(self, request_streams, *, tick_k: int = 8,
+                     ticks: int | None = None, seed: int = 0) -> dict:
+        """Serve request streams through the batched single-dispatch tick.
+
+        ``request_streams``: a list of per-stream ``Request`` lists (or
+        one flat ``Request`` list for a single stream).  Every request
+        is validated up front (:func:`~repro.serving.request.
+        resolve_request`: unknown model ids and non-positive SLA budgets
+        raise).  Each tick stages up to ``tick_k`` arrived requests per
+        stream; rows that find no free slot are *deferred* (re-staged
+        next tick — under saturation they admit late and age into SLA
+        misses rather than vanishing).  Runs ``ticks`` scheduling
+        periods (default ``env.cfg.periods``) and then flushes: final
+        drop pass + drain, exactly the reference path's closing pass.
+
+        Returns ``dict(metrics, aggregate, completions, stats)``:
+        ``metrics`` is the per-stream list of
+        :meth:`serve_episode_host`-schema dicts, ``completions`` the
+        per-stream completion records, ``stats`` the serving telemetry
+        (per-tick wall times, admitted/deferred counts, queue depths).
+        """
+        if request_streams and isinstance(request_streams[0], Request):
+            request_streams = [request_streams]
+        S = len(request_streams)
+        if S == 0:
+            raise ValueError("no request streams given")
+        names = self.env.registry.model_names
+        # resolve every request up front into per-stream column arrays,
+        # arrival-sorted.  Admission consumes staged rows FIFO in this
+        # order, so each stream's backlog is always the contiguous
+        # window [head, avail) of its columns — per-tick staging is pure
+        # array slicing, no per-request Python in the hot loop.
+        K = tick_k
+        n_req = np.array([len(st) for st in request_streams], np.int64)
+        N = max(int(n_req.max()), 1)
+        cols = dict(rid=np.full((S, N), -1, np.int32),
+                    model=np.zeros((S, N), np.int32),
+                    arrival=np.full((S, N), np.float32(INF), np.float32),
+                    deadline=np.full((S, N), np.float32(INF), np.float32),
+                    q=np.ones((S, N), np.float32))
+        for s, stream in enumerate(request_streams):
+            for j, r in enumerate(sorted(stream,
+                                         key=lambda r: r.arrival_us)):
+                mid, arr, dl, q = resolve_request(r, names)
+                cols["rid"][s, j] = r.rid
+                cols["model"][s, j] = mid
+                cols["arrival"][s, j] = arr
+                cols["deadline"][s, j] = dl
+                cols["q"][s, j] = q
+        tick, flush, queues = self._tick_fns(S)
+        n_ticks = ticks if ticks is not None else self.env.cfg.periods
+        t_s = float(self.env.cfg.t_s_us)
+        head = np.zeros((S,), np.int64)    # first not-yet-admitted row
+        completions: list[list[dict]] = [[] for _ in range(S)]
+        tick_wall_us: list[float] = []
+        depth_sum = 0
+        admitted = deferred = 0
+        lane = np.arange(K)
+        # all per-tick keys drawn up front: a host-side split per tick
+        # would cost two extra dispatches inside the serving loop
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(seed),
+                                           n_ticks))
+        for i in range(n_ticks):
+            t_now = i * t_s
+            # each stream's backlog is cols[:, head:avail]; window the
+            # first K rows with one gather per column — no per-stream
+            # Python in the hot loop
+            avail = (cols["arrival"] <= t_now).sum(axis=1)
+            n_stage = np.minimum(avail - head, K)
+            idx = np.minimum(head[:, None] + lane[None, :], N - 1)
+            valid = lane[None, :] < n_stage[:, None]
+            adm = {k: np.take_along_axis(cols[k], idx, axis=1)
+                   for k in ("model", "arrival", "deadline", "q", "rid")}
+            adm["valid"] = valid
+            t0 = time.perf_counter()
+            queues, out = tick(self.params, queues, adm, keys[i])
+            n_adm = np.asarray(out["n_admitted"])
+            comp = np.asarray(out["completed"])
+            tick_wall_us.append((time.perf_counter() - t0) * 1e6)
+            head += n_adm
+            admitted += int(n_adm.sum())
+            deferred += int((n_stage - n_adm).sum())
+            depth_sum += int(np.asarray(out["depth"]).sum())
+            if comp.any():
+                self._record(out, comp, completions)
+        queues, fout = flush(queues)
+        final = jax.tree.map(np.asarray, fout)
+        self._record(final, final["completed"], completions)
+        metrics = []
+        for s in range(S):
+            m = dict(hits=float(final["hits"][s]),
+                     counted=float(final["counted"][s]),
+                     arrived=float(final["arrived"][s]),
+                     sla_rate=float(final["sla_rate"][s]),
+                     energy_uj=float(final["energy_uj"][s]))
+            m["per_tenant"] = _tenant_table(names, final["ten_counted"][s],
+                                            final["ten_hit"][s])
+            metrics.append(m)
+        tot_c = int(final["counted"].sum())
+        tot_h = int(final["hits"].sum())
+        unserved = int((n_req - head).sum())
+        aggregate = dict(
+            sla_rate=tot_h / max(tot_c, 1), counted=tot_c, hits=tot_h,
+            arrived=int(final["arrived"].sum()),
+            energy_uj=float(final["energy_uj"].sum()),
+            completed=sum(len(c) for c in completions))
+        stats = dict(streams=S, ticks=n_ticks, tick_k=tick_k,
+                     tick_wall_us=tick_wall_us, admitted=admitted,
+                     deferred=deferred, unserved=unserved,
+                     mean_depth=depth_sum / max(n_ticks, 1))
+        return dict(metrics=metrics, aggregate=aggregate,
+                    completions=completions, stats=stats)
+
+    @staticmethod
+    def _record(out, comp, completions) -> None:
+        """Append one tick's completed jobs to the per-stream logs."""
+        comp = np.asarray(comp)
+        rid = np.asarray(out["rid"])
+        hit = np.asarray(out["hit"])
+        missed = np.asarray(out["missed"])
+        fin = np.asarray(out["finish_us"])
+        for s, j in zip(*np.nonzero(comp)):
+            completions[s].append(dict(
+                rid=int(rid[s, j]), hit=bool(hit[s, j]),
+                missed=bool(missed[s, j]), finish_us=float(fin[s, j])))

@@ -141,10 +141,28 @@ def commit_period_np(start, finish, valid, assign, t_s, num_sas):
 # --------------------------------------------------------------------------
 # JAX engine (jit / vmap friendly)
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("num_sas", "max_iters"))
+@functools.partial(jax.jit,
+                   static_argnames=("num_sas", "max_iters",
+                                    "stop_start_after"))
 def simulate_jax(valid, assign, prio, cost, bw, dep, ready, sa_free, B,
-                 *, num_sas: int, max_iters: int | None = None):
-    """Fixed-shape JAX twin of :func:`simulate_np`. float32, (start, finish)."""
+                 *, num_sas: int, max_iters: int | None = None,
+                 stop_start_after: float | None = None):
+    """Fixed-shape JAX twin of :func:`simulate_np`. float32, (start, finish).
+
+    ``stop_start_after``: optional event-loop early exit for callers
+    that only consume SJs *starting* before this time (the serving
+    tick: committed = ``start < T_s``, and every committed-path state
+    update derives from those SJs alone).  The loop runs the identical
+    event sequence but stops once the clock has passed the horizon AND
+    every SJ that started before it has finished — late starters still
+    participate in bandwidth contention up to that point (so the early
+    starters' finish times are exact), they just aren't simulated to
+    completion afterwards (their ``finish`` stays ``INF``; their
+    ``start`` is exact whenever it was assigned before the exit).
+    ``None`` (default) runs to full completion — bit-identical to the
+    unhorizoned loop, which is the prefix property the serving parity
+    tests pin down.
+    """
     n = valid.shape[0]
     M = num_sas
     if max_iters is None:
@@ -210,9 +228,15 @@ def simulate_jax(valid, assign, prio, cost, bw, dep, ready, sa_free, B,
         finished = finished | done
         return it + 1, next_t, started, finished, progress, start, finish
 
+    stop = INF if stop_start_after is None else float(stop_start_after)
+
     def cond(state):
-        it, _, _, finished, *_ = state
-        return (it < max_iters) & jnp.any(valid & ~finished)
+        it, t, started, finished, _, start, _ = state
+        live = jnp.any(valid & ~finished)
+        # past the start horizon, only early starters still owed a
+        # finish keep the loop alive (stop = INF reduces to `live`)
+        early_open = jnp.any(valid & started & (start < stop) & ~finished)
+        return (it < max_iters) & live & ((t < stop) | early_open)
 
     init = (jnp.array(0), jnp.array(0.0, jnp.float32),
             jnp.zeros(n, bool), jnp.zeros(n, bool), jnp.zeros(n, jnp.float32),

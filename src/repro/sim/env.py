@@ -241,8 +241,17 @@ class SchedulingEnv:
         mask = jnp.concatenate([jnp.array([True]), slots["valid"]])
         return feats.astype(jnp.float32), mask
 
-    def simulate(self, state: State, slots: Slots, prio, sa_choice):
-        """Engine run for the current RQ. Returns (start, finish) rel. to t."""
+    def simulate(self, state: State, slots: Slots, prio, sa_choice,
+                 commit_only: bool = False):
+        """Engine run for the current RQ. Returns (start, finish) rel. to t.
+
+        ``commit_only=True`` stops the event loop once every SJ starting
+        inside the period has finished (``stop_start_after=T_s``) — the
+        committed-path results are bit-identical, late starters keep
+        ``finish = INF``.  Only valid for consumers that ignore
+        uncommitted SJs (the serving tick; the training path needs every
+        finish for the reward).
+        """
         sa = jnp.clip(sa_choice.astype(jnp.int32), 0, self.num_sas - 1)
         # one-hot contraction instead of take_along_axis: batched gathers
         # serialize on XLA CPU (see sim/engine.py), (R, M) selects don't
@@ -254,7 +263,8 @@ class SchedulingEnv:
         start, fin = simulate_jax(
             slots["valid"], sa, prio, cost, bw, slots["dep"],
             slots["ready_rel"], sa_free_rel,
-            jnp.float32(self.cfg.bandwidth_gbps), num_sas=self.num_sas)
+            jnp.float32(self.cfg.bandwidth_gbps), num_sas=self.num_sas,
+            stop_start_after=(self.cfg.t_s_us if commit_only else None))
         return start, fin, cost, bw, take(slots["en_all"]), sa
 
     def reward(self, state: State, slots: Slots, fin):
@@ -308,10 +318,16 @@ class SchedulingEnv:
                 "sa_free": sa_free, "t": t + cfg.t_s_us}
 
     # ---------------- one full period (traceable) ----------------
-    def period(self, state: State, trace: Trace, act_fn):
+    def period(self, state: State, trace: Trace, act_fn,
+               commit_only: bool = False):
         """act_fn(feats, mask, slots, state) -> (a (R,G), prio (R,), sa (R,)).
 
         Returns (new_state, transition dict, info dict).
+        ``commit_only=True`` runs the engine with the period-boundary
+        start horizon (see :meth:`simulate`) — valid only when the
+        caller discards the transition (its reward/``s2`` need every
+        finish time); ``new_state`` and ``info["committed"]`` are
+        bit-identical either way.
         """
         t = state["t"]
         state = self.mark_drops(state, trace, t)
@@ -319,7 +335,8 @@ class SchedulingEnv:
         feats, mask = self.encode(slots, state)
         a, prio, sa_choice = act_fn(feats, mask, slots, state)
         start, fin, cost, bw, en, sa = self.simulate(state, slots, prio,
-                                                     sa_choice)
+                                                     sa_choice,
+                                                     commit_only=commit_only)
         r = self.reward(state, slots, fin)
         new_state = self.commit(state, trace, slots, start, fin, en, sa)
         # residual-RQ-only next state (paper Sec. 4.2): cutoff at *old* t
