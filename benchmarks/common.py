@@ -38,6 +38,17 @@ EVAL_LOAD = 1.3
 EVAL_QOS_FACTOR = 2.5
 
 
+def bench_meta() -> dict:
+    """Provenance block every BENCH_*.json carries in ``meta``: numbers
+    are only comparable across runs on the same jax/backend, and
+    ``host_cores`` qualifies forced-host-device scaling rows (on a
+    1-core box they measure dispatch overhead, not speedup — see
+    docs/BENCHMARKS.md)."""
+    return dict(jax_version=jax.__version__,
+                backend=jax.default_backend(),
+                host_cores=os.cpu_count() or 1)
+
+
 def _ckpt(w: str) -> str:
     hard = os.path.join(RUNS, f"{w}_hard", "best")
     return hard if os.path.isdir(hard) else \

@@ -49,15 +49,24 @@ regression guard does).
 subsection: rounds/sec and periods/sec for the SAME chunk config at
 1/2/4 devices, each measured in a subprocess with
 ``--xla_force_host_platform_device_count=N`` (the ``launch/dryrun.py``
-trick) — 1 device runs the plain fused chunk, N >= 2 the pmap-sharded
-chunk (``core.train.make_sharded_train_rounds``).  ``host_cores`` is
+trick) — 1 device runs the plain fused chunk, N >= 2 the mesh-sharded
+``jit``-of-``shard_map`` chunk (``core.train
+.make_sharded_train_rounds``).  Two extra arms quantify the sharding
+machinery itself at ONE device, where compute is identical and any
+delta is pure dispatch/collective overhead: ``shardmap_1dev`` (the
+mesh path on a 1-device mesh) and the retiring ``pmap`` reference rows
+(``core.train.make_pmap_train_rounds`` at 1 and 2 devices) —
+``overhead_1dev_shardmap`` / ``overhead_1dev_pmap`` are each arm's
+1-device rounds/sec over the plain fused row's (the CI guard tracks
+the shard_map overhead against the pmap arm's).  ``host_cores`` is
 recorded alongside: forced host devices *partition* the host's cores,
 so on a single-core machine the N-device arms serialize and
 ``scaling_2dev`` measures sharding overhead, not speedup — the section
 exists to track scaling efficiency as a trajectory, and reads as a
 true scaling curve only where ``host_cores >= N`` (or on real
-multi-accelerator hosts).  ``--devices-probe N`` is the internal child
-mode that times one arm and prints a ``devices_probe,{json}`` line.
+multi-accelerator hosts).  ``--devices-probe N --probe-impl IMPL`` is
+the internal child mode that times one arm and prints a
+``devices_probe,{json}`` line.
 
 The ``fleet_scaling`` section reports batched-rollout periods/sec per
 accelerator-fleet preset (``repro.costmodel.fleets``) — small (4-SA) vs
@@ -94,7 +103,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import REPO, make_env
+from benchmarks.common import REPO, bench_meta, make_env
 from repro.core import baselines as BL
 from repro.core import ddpg as D
 from repro.core import policy as P
@@ -103,8 +112,10 @@ from repro.core.replay import (DeviceReplay, ReplayBuffer, replay_add,
 from repro.core.rollout import (make_baseline_episode_batch,
                                 make_policy_period, make_rollout_batch,
                                 run_episode, stack_episodes)
-from repro.core.train import (make_sharded_train_rounds, make_train_rounds,
-                              replicate, round_keys, shard_round_keys)
+from repro.core.train import (make_device_mesh, make_pmap_train_rounds,
+                              make_sharded_train_rounds, make_train_rounds,
+                              mesh_replicate, replicate, round_keys,
+                              shard_round_keys)
 from repro.sim import engine as engine_mod
 import repro.sim.env as env_mod
 
@@ -342,23 +353,29 @@ def run_train(*, rounds: int = 24, batch: int = 2, periods: int = 4,
     return res
 
 
-def run_devices_probe(ndev: int, *, rounds: int = 24, batch: int = 4,
-                      periods: int = 4, max_rq: int = 16, max_jobs: int = 8,
-                      hidden: int = 8, updates_per_round: int = 2,
-                      batch_size: int = 4, capacity: int = 8000,
-                      sigma0: float = 0.4, sigma_min: float = 0.05,
-                      sigma_decay: float = 0.97, seed: int = 0) -> dict:
+def run_devices_probe(ndev: int, *, impl: str = "", rounds: int = 24,
+                      batch: int = 4, periods: int = 4, max_rq: int = 16,
+                      max_jobs: int = 8, hidden: int = 8,
+                      updates_per_round: int = 2, batch_size: int = 4,
+                      capacity: int = 8000, sigma0: float = 0.4,
+                      sigma_min: float = 0.05, sigma_decay: float = 0.97,
+                      seed: int = 0) -> dict:
     """Time one fused chunk of ``rounds`` rounds at ``ndev`` devices.
 
     Runs in a CHILD process forced to ``ndev`` host devices
-    (``run_train_devices`` spawns it); ``ndev == 1`` times the plain
-    fused chunk, ``ndev >= 2`` the pmap-sharded chunk with per-device
-    double-buffered rings.  Same round logic and global batch/update
-    sizes as :func:`run_train`'s AFTER arm (with ``batch`` raised so it
-    splits over 4 devices), so the 1-device row doubles as that arm's
+    (``run_train_devices`` spawns it).  ``impl`` selects the arm:
+    ``fused`` (the plain single-device chunk — ``ndev`` must be 1),
+    ``shard_map`` (the mesh path, valid at any ``ndev`` including 1 —
+    the 1-device row isolates the sharding machinery's overhead), or
+    ``pmap`` (the retiring PR 6 arm, the overhead reference).  The
+    default is ``fused`` at 1 device and ``shard_map`` otherwise.
+    Same round logic and global batch/update sizes as
+    :func:`run_train`'s AFTER arm (with ``batch`` raised so it splits
+    over 4 devices), so the 1-device fused row doubles as that arm's
     twin.  Prints a ``devices_probe,{json}`` line for the parent.
     """
     assert len(jax.local_devices()) >= ndev, (ndev, jax.local_devices())
+    impl = impl or ("fused" if ndev == 1 else "shard_map")
     env = make_env("light", periods=periods, max_rq=max_rq,
                    max_jobs=max_jobs)
     pcfg = P.PolicyConfig(feat_dim=env.feat_dim, act_dim=env.act_dim,
@@ -370,7 +387,8 @@ def run_devices_probe(ndev: int, *, rounds: int = 24, batch: int = 4,
     flags = jnp.ones((rounds,), bool)
     keys = round_keys(seed + 1, 0, rounds)
 
-    if ndev == 1:
+    if impl == "fused":
+        assert ndev == 1, "the plain fused chunk is single-device"
         rounds_fn = make_train_rounds(env, dcfg, **kw)
 
         def chunk():
@@ -381,70 +399,104 @@ def run_devices_probe(ndev: int, *, rounds: int = 24, batch: int = 4,
             jax.block_until_ready(out[3]["sla"])
     else:
         devs = jax.local_devices()[:ndev]
-        rounds_fn = make_sharded_train_rounds(env, dcfg, devices=devs, **kw)
+        if impl == "shard_map":
+            mesh = make_device_mesh(devs)
+            rounds_fn = make_sharded_train_rounds(env, dcfg, mesh=mesh,
+                                                  **kw)
+            repl = lambda t: mesh_replicate(t, mesh)
+        else:
+            assert impl == "pmap", impl
+            rounds_fn = make_pmap_train_rounds(env, dcfg, devices=devs,
+                                               **kw)
+            repl = lambda t: replicate(t, devs)
         dkeys = shard_round_keys(keys, ndev)
         round_size = (batch // ndev) * periods
 
         def chunk():
-            state = replicate(D.init_ddpg(jax.random.PRNGKey(seed), dcfg),
-                              devs)
-            pair = replicate(replay_pair_init(
+            state = repl(D.init_ddpg(jax.random.PRNGKey(seed), dcfg))
+            pair = repl(replay_pair_init(
                 replay_init(capacity // ndev, env.seq_len, env.feat_dim,
-                            env.act_dim), round_size), devs)
+                            env.act_dim), round_size))
             out = rounds_fn(state, pair, dkeys,
-                            replicate(jnp.float32(sigma0), devs), flags)
+                            repl(jnp.float32(sigma0)), flags)
             jax.block_until_ready(out[3]["sla"])
 
     chunk()                                              # warmup/compile
     t0 = time.perf_counter()
     chunk()
     secs = time.perf_counter() - t0
-    res = dict(devices=ndev, rounds=rounds, batch=batch,
+    res = dict(devices=ndev, impl=impl, rounds=rounds, batch=batch,
                rounds_per_sec=round(rounds / secs, 2),
                periods_per_sec=round(rounds * batch * periods / secs, 1))
     print("devices_probe," + json.dumps(res), flush=True)
     return res
 
 
+def _spawn_probe(n: int, impl: str, rounds: int, timeout: int) -> dict:
+    env = {**os.environ,
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={n}",
+           "PYTHONPATH": os.pathsep.join(
+               [os.path.join(REPO, "src"), REPO,
+                os.environ.get("PYTHONPATH", "")])}
+    cmd = [sys.executable, "-m", "benchmarks.rollout_throughput",
+           "--devices-probe", str(n), "--probe-impl", impl,
+           "--train-rounds", str(rounds)]
+    r = subprocess.run(cmd, env=env, cwd=REPO, capture_output=True,
+                       text=True, timeout=timeout)
+    line = next((l for l in r.stdout.splitlines()
+                 if l.startswith("devices_probe,")), None)
+    if r.returncode != 0 or line is None:
+        raise RuntimeError(f"devices probe at {n} ({impl}) failed:\n"
+                           f"{r.stdout[-2000:]}{r.stderr[-2000:]}")
+    return json.loads(line.split(",", 1)[1])
+
+
 def run_train_devices(counts=(1, 2, 4), *, rounds: int = 24,
                       timeout: int = 900) -> dict:
     """The ``train_throughput.devices`` scaling section.
 
-    Spawns one child per device count with
+    Spawns one child per (device count, impl) with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
     the child imports jax — same trick as ``launch/dryrun.py``; the
     module's own import-time flag guard yields to a pre-set value) and
-    collects each child's ``devices_probe`` record.  ``scaling_2dev``
-    is 2-device over 1-device rounds/sec; ``host_cores`` qualifies it —
-    forced host devices split the physical cores, so the ratio is a
-    real concurrency measure only when ``host_cores >= N``.
+    collects each child's ``devices_probe`` record:
+
+    - ``counts``: the scaling curve — the plain fused chunk at 1
+      device, the mesh-sharded shard_map chunk at every N >= 2;
+    - ``shardmap_1dev`` / ``pmap``: the 1-device overhead arms (and the
+      pmap 2-device reference) — at one forced device all arms run the
+      identical compute, so ``overhead_1dev_*`` (fused rounds/sec over
+      the arm's) isolates what the sharding machinery itself costs; CI
+      guards the shard_map overhead against the pmap arm's (the
+      migration must not be slower than what it replaces);
+    - ``scaling_2dev``: shard_map 2-device over fused 1-device
+      rounds/sec; ``host_cores`` qualifies it — forced host devices
+      split the physical cores, so the ratio is a real concurrency
+      measure only when ``host_cores >= N``.
     """
     out: dict[str, dict] = {}
     for n in counts:
-        env = {**os.environ,
-               "XLA_FLAGS": f"--xla_force_host_platform_device_count={n}",
-               "PYTHONPATH": os.pathsep.join(
-                   [os.path.join(REPO, "src"), REPO,
-                    os.environ.get("PYTHONPATH", "")])}
-        cmd = [sys.executable, "-m", "benchmarks.rollout_throughput",
-               "--devices-probe", str(n), "--train-rounds", str(rounds)]
-        r = subprocess.run(cmd, env=env, cwd=REPO, capture_output=True,
-                           text=True, timeout=timeout)
-        line = next((l for l in r.stdout.splitlines()
-                     if l.startswith("devices_probe,")), None)
-        if r.returncode != 0 or line is None:
-            raise RuntimeError(f"devices probe at {n} failed:\n"
-                               f"{r.stdout[-2000:]}{r.stderr[-2000:]}")
-        out[str(n)] = json.loads(line.split(",", 1)[1])
+        impl = "fused" if n == 1 else "shard_map"
+        out[str(n)] = _spawn_probe(n, impl, rounds, timeout)
+    sm1 = _spawn_probe(1, "shard_map", rounds, timeout)
+    pmap_rows = {"1": _spawn_probe(1, "pmap", rounds, timeout),
+                 "2": _spawn_probe(2, "pmap", rounds, timeout)}
+    fused_rps = out["1"]["rounds_per_sec"]
     cores = os.cpu_count() or 1
-    res = dict(counts=out,
+    res = dict(counts=out, shardmap_1dev=sm1, pmap=pmap_rows,
                scaling_2dev=round(out["2"]["rounds_per_sec"]
-                                  / out["1"]["rounds_per_sec"], 2),
+                                  / fused_rps, 2),
+               overhead_1dev_shardmap=round(
+                   fused_rps / sm1["rounds_per_sec"], 2),
+               overhead_1dev_pmap=round(
+                   fused_rps / pmap_rows["1"]["rounds_per_sec"], 2),
                host_cores=cores,
                note=("forced host devices partition the physical cores; "
                      "with host_cores < N the N-device arms time-slice "
                      "one core and scaling_2dev tracks sharding overhead "
-                     "rather than parallel speedup"))
+                     "rather than parallel speedup; overhead_1dev_* are "
+                     "fused/arm rounds-per-sec ratios at ONE device — "
+                     "identical compute, so >1 is pure machinery cost"))
     print("train_devices," + json.dumps(res), flush=True)
     return res
 
@@ -532,10 +584,15 @@ def main(argv=None):
     ap.add_argument("--train-rounds", type=int, default=24,
                     help="rounds per arm in the train_throughput section")
     ap.add_argument("--devices-probe", type=int, default=0, metavar="N",
-                    help="internal child mode: time one fused chunk at N "
+                    help="internal child mode: time one chunk arm at N "
                          "forced host devices, print devices_probe,{json} "
                          "and exit (spawned by the devices scaling "
                          "subsection)")
+    ap.add_argument("--probe-impl", default="",
+                    choices=("", "fused", "shard_map", "pmap"),
+                    help="arm for --devices-probe: plain fused chunk, "
+                         "mesh shard_map, or the retiring pmap reference "
+                         "(default: fused at 1 device, shard_map above)")
     ap.add_argument("--device-counts", default="1,2,4",
                     help="device counts for the train_throughput devices "
                          "scaling subsection")
@@ -555,7 +612,7 @@ def main(argv=None):
 
     if args.devices_probe:
         # child mode: one timed arm, no out-file write
-        return run_devices_probe(args.devices_probe,
+        return run_devices_probe(args.devices_probe, impl=args.probe_impl,
                                  rounds=args.train_rounds)
 
     def want(section):
@@ -595,6 +652,9 @@ def main(argv=None):
     if want("fleet_scaling"):
         results["fleet_scaling"] = run_fleet_scaling(
             fleets=tuple(args.fleets.split(",")))
+    # provenance stamped on every (also partial) run — numbers are only
+    # comparable across runs on the same jax/backend/core count
+    results["meta"] = bench_meta()
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)
     print(f"rollout_json,{args.out}", flush=True)

@@ -55,7 +55,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import REPO
+from benchmarks.common import REPO, bench_meta
 from repro.serving import (LoadGenConfig, MultiTenantService,
                            request_streams, trace_to_requests)
 from repro.sim.env import EnvConfig
@@ -134,9 +134,9 @@ def run_guard(svc: MultiTenantService, *, streams: int = 96,
     host_p = _pcts(host_period_us)
     speedup = rps_b / rps_h
     guard = dict(
-        meta=dict(workload="light", streams=streams, tick_k=K,
-                  repeats=repeats, n_requests=n_requests,
-                  host_cores=os.cpu_count() or 1, **BENCH_CFG),
+        meta=dict(**bench_meta(),
+                  workload="light", streams=streams, tick_k=K,
+                  repeats=repeats, n_requests=n_requests, **BENCH_CFG),
         decision_latency=dict(
             tick_p50_us=tick_p["p50"], tick_p99_us=tick_p["p99"],
             per_stream_p50_us=round(tick_p["p50"] / streams, 2),

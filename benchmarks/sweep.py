@@ -32,7 +32,8 @@ import json
 import os
 import time
 
-from benchmarks.common import (EVAL_LOAD, EVAL_QOS_FACTOR, REPO, eval_policy,
+from benchmarks.common import (EVAL_LOAD, EVAL_QOS_FACTOR, REPO, bench_meta,
+                               eval_policy,
                                make_env)
 from repro.core import baselines as BL
 from repro.costmodel.fleets import fleet_names
@@ -116,7 +117,8 @@ def run(*, quick: bool = True, smoke: bool = False, workload: str = "light",
         "wall_s": round(time.time() - t_all, 1),
     }
     result = dict(
-        meta=dict(size=size, workload=workload, periods=periods,
+        meta=dict(**bench_meta(),
+                  size=size, workload=workload, periods=periods,
                   max_rq=max_rq, max_jobs=max_jobs, seeds=len(list(seeds)),
                   magma_population=mcfg.population,
                   magma_generations=mcfg.generations,

@@ -40,7 +40,7 @@ import time
 
 import jax
 
-from benchmarks.common import EVAL_LOAD, EVAL_QOS_FACTOR, REPO
+from benchmarks.common import EVAL_LOAD, EVAL_QOS_FACTOR, REPO, bench_meta
 from repro.ckpt import restore_checkpoint
 from repro.core import policy as P
 from repro.core.generalist import (GeneralistSpec, build_padded_envs,
@@ -171,7 +171,8 @@ def run(*, quick: bool = True, smoke: bool = False, workload: str = "light",
         "wall_s": round(time.time() - t_all, 1),
     }
     result = dict(
-        meta=dict(size=size_name, workload=workload, fleets=list(fleets),
+        meta=dict(**bench_meta(),
+                  size=size_name, workload=workload, fleets=list(fleets),
                   m_max=m_max, desc_dim=spec.desc_dim, hidden=hidden,
                   episodes=episodes, periods=periods, seeds=n_seeds,
                   load=EVAL_LOAD, qos_factor=EVAL_QOS_FACTOR),

@@ -7,6 +7,14 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 CI_TMP="$(mktemp -d "${TMPDIR:-/tmp}/relmas_ci.XXXXXX")"
 trap 'rm -rf "$CI_TMP"' EXIT
+# pmap lint: the trainer is mesh-sharded (shard_map); new jax.pmap uses
+# must not creep back into core.  The surviving parity oracles are
+# tagged "# pmap-migration" on the jax.pmap line and exempt.
+if grep -rn "jax\.pmap" src/repro/core | grep -v "pmap-migration"; then
+  echo "ERROR: untagged jax.pmap under src/repro/core — use the mesh" \
+       "shard_map path (docs/ARCHITECTURE.md 'Mesh-sharded rounds')" >&2
+  exit 1
+fi
 python -m pytest -x -q "$@"
 # README quickstart, run verbatim (keeps the docs honest): the ~60-line
 # end-to-end example; SKIP_QUICKSTART=1 skips it.
@@ -41,16 +49,17 @@ if [ -z "${SKIP_TRAIN:-}" ]; then
     --updates-per-episode 2 --batch-size 8 --replay-capacity 64 \
     --warmup-episodes 2 --eval-every 100 --eval-seeds 2 \
     --outdir "$CI_TMP/relmas_smoke"
-  # sharded-trainer smoke: the same config pmap-sharded over 2 forced
-  # host devices (--devices 2: split collection, replicated update with
-  # pmean'd grads, per-device double-buffered rings; see
-  # docs/ARCHITECTURE.md "sharded round")
+  # sharded-trainer smoke: the same config mesh-sharded (shard_map)
+  # over 2 forced host devices (--devices 2: split collection,
+  # replicated update on the all_gathered global batch, per-device
+  # double-buffered rings; see docs/ARCHITECTURE.md "Mesh-sharded
+  # rounds")
   XLA_FLAGS="--xla_force_host_platform_device_count=2" \
   python -m repro.launch.rl_train --workload light --episodes 4 \
     --batch-episodes 2 --periods 6 --max-rq 16 --max-jobs 8 --hidden 8 \
     --updates-per-episode 2 --batch-size 8 --replay-capacity 64 \
     --warmup-episodes 2 --eval-every 100 --eval-seeds 2 --devices 2 \
-    --outdir "$CI_TMP/relmas_sharded_smoke"
+    --sharded-impl shard_map --outdir "$CI_TMP/relmas_sharded_smoke"
 fi
 # generalist smokes: (1) a 2-fleet --fleet training run (2 fused
 # fleet-sampling rounds: descriptor-conditioned policy, stacked fleet
@@ -83,9 +92,13 @@ fi
 # dependent, so a failure requires BOTH the absolute fused rounds/sec
 # AND the machine-invariant fused/hostloop speedup (both arms measured
 # in the same fresh run) to regress >30%.  The devices subsection is
-# guarded the same way: its 2-device rounds/sec AND the machine-
-# invariant 2dev/1dev scaling ratio must both regress >30% to fail
-# (and the 1/2-device rows must be present); SKIP_BENCH=1 skips
+# guarded the same way: its 2-device (shard_map) rounds/sec AND the
+# machine-invariant 2dev/1dev scaling ratio must both regress >30% to
+# fail (and the 1/2-device rows must be present).  The migration's
+# no-regression bar is guarded via the 1-device machinery arms:
+# shard_map's 1-device overhead must stay within 30% of the pmap arm's
+# in the same fresh run, and the shardmap_1dev rounds/sec row is
+# dual-condition guarded vs the committed file; SKIP_BENCH=1 skips
 if [ -z "${SKIP_BENCH:-}" ]; then
   python -m benchmarks.rollout_throughput --only train_throughput \
     --out "$CI_TMP/BENCH_rollout_fresh.json"
@@ -105,6 +118,17 @@ fd, cd = fresh.get("devices", {}), committed.get("devices", {})
 for row in ("1", "2"):
     assert row in fd.get("counts", {}), \
         f"devices scaling section missing {row}-device row: {fd}"
+assert fd["counts"]["2"].get("impl") == "shard_map", \
+    f"2-device row is not the shard_map arm: {fd['counts']['2']}"
+for arm in ("shardmap_1dev", "pmap"):
+    assert arm in fd, f"devices section missing machinery arm {arm}: {fd}"
+# machinery bar, fresh-run-internal (machine-invariant): shard_map's
+# 1-device overhead vs the fused chunk must stay within 30% of pmap's
+ov_sm, ov_pm = fd["overhead_1dev_shardmap"], fd["overhead_1dev_pmap"]
+print(f"devices machinery: overhead_1dev shard_map {ov_sm} vs pmap {ov_pm}")
+if ov_sm > ov_pm / 0.7:
+    sys.exit(f"REGRESSION: shard_map 1-device overhead {ov_sm} > 1/0.7x "
+             f"the pmap arm's {ov_pm} in the same run")
 if cd:
     new2 = fd["counts"]["2"]["rounds_per_sec"]
     old2 = cd["counts"]["2"]["rounds_per_sec"]
@@ -115,6 +139,16 @@ if cd:
         sys.exit(f"REGRESSION: sharded 2-device rounds/sec {new2} < 70% "
                  f"of committed {old2} AND scaling_2dev {new_sc} < 70% "
                  f"of committed {old_sc}")
+    if "shardmap_1dev" in cd:
+        new1 = fd["shardmap_1dev"]["rounds_per_sec"]
+        old1 = cd["shardmap_1dev"]["rounds_per_sec"]
+        old_ov = cd["overhead_1dev_shardmap"]
+        print(f"shardmap_1dev guard: rounds/sec {new1} vs committed {old1};"
+              f" overhead {ov_sm} vs committed {old_ov}")
+        if new1 < 0.7 * old1 and ov_sm > old_ov / 0.7:
+            sys.exit(f"REGRESSION: shard_map 1-device rounds/sec {new1} < "
+                     f"70% of committed {old1} AND overhead {ov_sm} > "
+                     f"1/0.7x committed {old_ov}")
 PY
 fi
 # serving bench: (1) loadgen smoke — one scenario at low rate through

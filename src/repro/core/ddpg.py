@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import policy as P
-from repro.core.replay import replay_sample
+from repro.core.replay import replay_sample, replay_sample_global
 
 Params = dict[str, Any]
 
@@ -185,7 +185,9 @@ ddpg_update_jit = jax.jit(ddpg_update, static_argnames=("cfg", "axis_name"))
 
 def ddpg_update_rounds(state: DDPGState, cfg: DDPGConfig, buf: dict, key,
                        num_updates: int, batch_size: int,
-                       axis_name: str | None = None) -> tuple[DDPGState, dict]:
+                       axis_name: str | None = None,
+                       gather_axis: str | None = None,
+                       ) -> tuple[DDPGState, dict]:
     """Pure ``num_updates``-step DDPG update scan (traceable body).
 
     Each scan step draws its own uniform replay sample keyed by a split
@@ -196,14 +198,32 @@ def ddpg_update_rounds(state: DDPGState, cfg: DDPGConfig, buf: dict, key,
     fused training round in ``repro.core.train``) or dispatch via
     :func:`ddpg_update_scan`.
 
-    Under a mapped device axis (``axis_name`` set), ``buf`` and ``key``
-    are per-device (local ring shard, device-folded key) while ``state``
-    is replicated; gradients are cross-device averaged per update (see
-    :func:`ddpg_update`) so the replicated state stays in lockstep.
+    Two replicated-update modes under a mapped device axis (``buf`` and
+    ``key`` per-device — local ring shard, device-folded key — while
+    ``state`` is replicated):
+
+    - ``gather_axis`` (the mesh-sharded trainer): each device samples
+      ``batch_size`` rows locally and the rows are ``all_gather``'d
+      (``replay_sample_global``) so every device runs the identical
+      plain update on the identical global ``D * batch_size`` batch —
+      the minibatch spans the union experience pool and replicas stay
+      bit-identical with no gradient collective at all;
+    - ``axis_name`` (the retiring pmap path): each device updates from
+      its ``batch_size`` local samples and gradients are cross-device
+      averaged per update (see :func:`ddpg_update`).  Equal shards make
+      the mean-of-means the global-batch mean, so the two modes agree
+      up to float reassociation on the same sample keys.
     """
+    if axis_name is not None and gather_axis is not None:
+        raise ValueError("axis_name (pmean'd local batches) and "
+                         "gather_axis (all-gathered global batch) are "
+                         "mutually exclusive replication modes")
     keys = jax.random.split(key, num_updates)
 
     def step(st, k):
+        if gather_axis is not None:
+            batch = replay_sample_global(buf, k, batch_size, gather_axis)
+            return ddpg_update(st, cfg, batch)
         batch = replay_sample(buf, k, batch_size)
         return ddpg_update(st, cfg, batch, axis_name)
 

@@ -32,9 +32,9 @@ from repro.core.generalist.features import (GeneralistSpec,
                                             action_channel_mask)
 from repro.core.generalist.rollout import collect_generalist
 from repro.core.replay import (replay_add, replay_init, replay_pair_step,
-                               replay_sample)
+                               replay_sample, replay_sample_global)
 from repro.core.rollout import _runner_cache
-from repro.core.train import INFO_KEYS
+from repro.core.train import INFO_KEYS, MESH_AXIS, Mesh, _jit_shard_map
 
 Metrics = dict[str, jnp.ndarray]
 
@@ -72,15 +72,29 @@ def expand_batch(batch: dict, desc_all, sa_mask_all) -> dict:
 def generalist_update_rounds(state: D.DDPGState, dcfg: D.DDPGConfig,
                              buf: dict, desc_all, sa_mask_all, key,
                              num_updates: int, batch_size: int,
-                             axis_name: str | None = None):
+                             axis_name: str | None = None,
+                             gather_axis: str | None = None):
     """``ddpg_update_rounds`` with per-sample descriptor re-attachment:
     the whole sample -> expand -> update -> soft-target chain fuses
-    into one ``lax.scan`` (traceable body).  ``axis_name``: replicated
-    update under a mapped device axis with cross-device gradient
-    averaging (see ``repro.core.ddpg.ddpg_update``)."""
+    into one ``lax.scan`` (traceable body).
+
+    Replicated-update modes mirror ``repro.core.ddpg``: ``gather_axis``
+    (the mesh path) all-gathers each device's raw sampled rows —
+    *including* the ``fleet`` column, so descriptors re-attach after
+    the gather and every device expands the identical global batch —
+    then runs the plain update (bit-identical replicas); ``axis_name``
+    (the retiring pmap arm) expands local samples and cross-device
+    averages gradients (see ``repro.core.ddpg.ddpg_update``)."""
+    if axis_name is not None and gather_axis is not None:
+        raise ValueError("axis_name and gather_axis are mutually "
+                         "exclusive replication modes")
     keys = jax.random.split(key, num_updates)
 
     def step(st, k):
+        if gather_axis is not None:
+            raw = replay_sample_global(buf, k, batch_size, gather_axis)
+            return D.ddpg_update(
+                st, dcfg, expand_batch(raw, desc_all, sa_mask_all))
         batch = expand_batch(replay_sample(buf, k, batch_size),
                              desc_all, sa_mask_all)
         return D.ddpg_update(st, dcfg, batch, axis_name)
@@ -196,14 +210,16 @@ def make_generalist_rounds(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
 
 
 # ---------------------------------------------------------------------------
-# multi-device sharded generalist rounds (pmap over a "dev" axis)
+# multi-device sharded generalist rounds (jit-of-shard_map over a mesh)
 # ---------------------------------------------------------------------------
 def _sharded_generalist_round_body(envs: list[PaddedEnv],
                                    dcfg: D.DDPGConfig, *,
                                    num_devices: int, batch_episodes: int,
                                    num_updates: int, batch_size: int,
                                    sigma_min: float, sigma_decay: float,
-                                   arrivals=None, axis_name: str = "dev"):
+                                   arrivals=None,
+                                   axis_name: str = MESH_AXIS,
+                                   update_gather: bool = True):
     """Per-device generalist round body under a mapped ``axis_name``.
 
     The sharded twin of ``repro.core.train._sharded_round_body`` with
@@ -213,9 +229,11 @@ def _sharded_generalist_round_body(envs: list[PaddedEnv],
     log and the ring's ``fleet`` columns stay consistent with the
     single-device schedule's semantics (one fleet per round).  Trace /
     rollout / update keys come from the per-device key
-    (``shard_round_keys``); the update scan samples the local ``read``
-    ring (descriptors re-attached per sample) with cross-device
-    gradient averaging; the double-buffered ring pair carries the
+    (``shard_round_keys``); ``update_gather`` selects the update's
+    sampling topology exactly as in ``core.train`` (True: all-gathered
+    global minibatch, descriptors re-attached post-gather, replicas
+    bit-identical; False: local samples + pmean'd gradients — the
+    retiring pmap arm); the double-buffered ring pair carries the
     ``fleet`` column like any other field.
     """
     template, K = envs[0], len(envs)
@@ -248,7 +266,9 @@ def _sharded_generalist_round_body(envs: list[PaddedEnv],
         def upd(st):
             st2, infos = generalist_update_rounds(
                 st, dcfg, pair["read"], stack["desc"], stack["sa_mask"],
-                kup, num_updates, per_bs, axis_name)
+                kup, num_updates, per_bs,
+                axis_name=None if update_gather else axis_name,
+                gather_axis=axis_name if update_gather else None)
             return st2, {k: infos[k][-1] for k in INFO_KEYS}
 
         def no_upd(st):
@@ -285,37 +305,66 @@ def _sharded_generalist_scan(round_fn):
 
 
 def make_sharded_generalist_rounds(envs: list[PaddedEnv],
-                                   dcfg: D.DDPGConfig, *, devices,
+                                   dcfg: D.DDPGConfig, *, mesh: Mesh,
                                    batch_episodes: int, num_updates: int,
                                    batch_size: int, sigma_min: float,
                                    sigma_decay: float, arrivals=None):
-    """A chunk of R fleet-sampling rounds sharded over ``devices``.
+    """A chunk of R fleet-sampling rounds sharded over ``mesh`` in one
+    jitted ``shard_map`` dispatch.
 
     Returns ``rounds_fn(state, pair, keys, shared_keys, sigma,
     do_update)`` -> ``(state, pair, sigma, metrics)``.  Same contract
     as ``core.train.make_sharded_train_rounds`` (replicated donated
-    ``state``, per-device donated ring ``pair`` built over
-    :func:`generalist_replay_init`, ``keys`` (D, R, 2), replicated
-    ``sigma``, shared ``do_update`` (R,)) plus ``shared_keys`` — the
-    un-sharded (R, 2) round keys (``round_keys``) broadcast to every
-    device, from which each round's common fleet index is drawn.
-    ``metrics`` gains the per-round ``fleet`` entry, identical across
-    the device rows.
+    ``state`` via ``mesh_replicate``, per-device donated ring ``pair``
+    built over :func:`generalist_replay_init`, ``keys`` (D, R, 2),
+    replicated ``sigma``, replicated ``do_update`` (R,)) plus
+    ``shared_keys`` — the un-sharded (R, 2) round keys (``round_keys``)
+    replicated to every device, from which each round's common fleet
+    index is drawn.  Each update all-gathers the devices' sampled rows
+    (fleet column included) into the global union-pool minibatch, so
+    replicas stay bit-identical.  ``metrics`` gains the per-round
+    ``fleet`` entry, identical across the device rows.
     """
+    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay, arrivals=arrivals)
+    key_ = _cache_key("shardmap_generalist_rounds", dcfg, len(envs), kw) \
+        + (mesh,)
+    cache = _runner_cache(envs[0])
+    if key_ not in cache:
+        round_fn = _sharded_generalist_round_body(
+            envs, dcfg, num_devices=mesh.devices.size,
+            axis_name=mesh.axis_names[0], update_gather=True, **kw)
+        cache[key_] = _jit_shard_map(_sharded_generalist_scan(round_fn),
+                                     mesh, n_args=6, sharded=(0, 1, 2, 4))
+    return cache[key_]
+
+
+def make_pmap_generalist_rounds(envs: list[PaddedEnv],
+                                dcfg: D.DDPGConfig, *, devices,
+                                batch_episodes: int, num_updates: int,
+                                batch_size: int, sigma_min: float,
+                                sigma_decay: float, arrivals=None):
+    """The retiring PR 6 pmap arm (local sampling + pmean'd gradients)
+    — same signature/layout as :func:`make_sharded_generalist_rounds`
+    with ``devices`` instead of ``mesh``.  Kept one migration-window PR
+    as the cross-implementation parity oracle (see
+    ``core.train.make_pmap_train_rounds``)."""
     devices = tuple(devices)
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
               sigma_decay=sigma_decay, arrivals=arrivals)
-    key_ = _cache_key("sharded_generalist_rounds", dcfg, len(envs), kw) \
+    key_ = _cache_key("pmap_generalist_rounds", dcfg, len(envs), kw) \
         + (devices,)
     cache = _runner_cache(envs[0])
     if key_ not in cache:
         round_fn = _sharded_generalist_round_body(
-            envs, dcfg, num_devices=len(devices), **kw)
-        cache[key_] = jax.pmap(_sharded_generalist_scan(round_fn),
-                               axis_name="dev", devices=devices,
-                               in_axes=(0, 0, 0, None, 0, None),
-                               donate_argnums=(0, 1))
+            envs, dcfg, num_devices=len(devices), update_gather=False,
+            **kw)
+        cache[key_] = jax.pmap(  # pmap-migration: PR 6 oracle, one-PR window
+            _sharded_generalist_scan(round_fn),
+            axis_name=MESH_AXIS, devices=devices,
+            in_axes=(0, 0, 0, None, 0, None), donate_argnums=(0, 1))
     return cache[key_]
 
 
@@ -325,22 +374,26 @@ def sharded_generalist_rounds_reference(envs: list[PaddedEnv],
                                         batch_episodes: int,
                                         num_updates: int, batch_size: int,
                                         sigma_min: float,
-                                        sigma_decay: float, arrivals=None):
+                                        sigma_decay: float, arrivals=None,
+                                        update_gather: bool = True):
     """Single-device vmap oracle for
     :func:`make_sharded_generalist_rounds` (same signature and (D, R)
-    output layout; the ``pmean`` collectives resolve identically under
-    ``vmap(axis_name="dev")``)."""
+    output layout; the ``pmean`` / ``all_gather`` collectives resolve
+    identically under ``vmap(axis_name=MESH_AXIS)``).
+    ``update_gather=False`` instead mirrors the retiring
+    :func:`make_pmap_generalist_rounds` arm."""
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
               sigma_decay=sigma_decay, arrivals=arrivals)
     key_ = _cache_key("sharded_generalist_ref", dcfg, len(envs), kw) \
-        + (num_devices,)
+        + (num_devices, update_gather)
     cache = _runner_cache(envs[0])
     if key_ not in cache:
         round_fn = _sharded_generalist_round_body(
-            envs, dcfg, num_devices=num_devices, **kw)
+            envs, dcfg, num_devices=num_devices,
+            update_gather=update_gather, **kw)
         vround = jax.vmap(round_fn, in_axes=(0, 0, 0, None, 0, None),
-                          axis_name="dev")
+                          axis_name=MESH_AXIS)
 
         def _scan(state, pair, keys, shared_keys, sigma, do_update):
             def step(carry, xs):

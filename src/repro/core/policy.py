@@ -11,10 +11,12 @@ Critic: same architecture, input per timestep = concat(state, action)
         hidden state; the Q of the pair is the last valid timestep's.
 
 Pure JAX: params are pytrees (dicts), apply functions are jit/vmap
-friendly and run the recurrence with ``jax.lax.scan``.  The Pallas
-kernel in ``repro.kernels.lstm_cell`` implements the same cell for the
-TPU hot path; ``use_pallas`` switches it in (numerics validated in
-tests against this reference path).
+friendly and run the recurrence with ``jax.lax.scan``.  For the TPU
+hot path, ``use_pallas`` switches the recurrence to the full-sequence
+Pallas kernel ``repro.kernels.lstm_seq`` (one pallas_call per
+invocation, weights VMEM-resident across timesteps; the single-step
+``repro.kernels.lstm_cell`` remains the serving-side building block).
+Numerics of both are validated in tests against this reference path.
 """
 from __future__ import annotations
 
@@ -105,22 +107,18 @@ def _lstm_scan(p: Params, xs, mask, hidden: int, use_pallas: bool = False,
     (master params stay f32; numerics validated in tests).
     """
     if use_pallas:
-        from repro.kernels.lstm_cell import ops as lstm_ops
-        cell = lstm_ops.lstm_cell
-
-        def step_pl(carry, inp):
-            h, c = carry
-            x, m = inp
-            h2, c2 = cell(x[None, :], h[None, :], c[None, :],
-                          p["wx"], p["wh"], p["b"])
-            h2, c2 = h2[0], c2[0]
-            return (jnp.where(m, h2, h), jnp.where(m, c2, c)), \
-                jnp.where(m, h2, h)
-
-        init = (jnp.zeros((hidden,), xs.dtype),
-                jnp.zeros((hidden,), xs.dtype))
-        _, hs = jax.lax.scan(step_pl, init, (xs, mask))
-        return hs
+        # the full-sequence kernel (repro.kernels.lstm_seq): the whole
+        # T-step recurrence is ONE pallas_call with the weights resident
+        # in VMEM across timesteps, instead of T lstm_cell dispatches
+        # each re-reading Wx/Wh from HBM.  Kernel batch axis is used as
+        # a singleton here; the policy-level vmaps (batched update /
+        # rollout) batch it for real.  Masked-carry semantics match the
+        # scan reference below (kernel tests + policy-level parity in
+        # tests/test_kernels_lstm_seq.py).
+        from repro.kernels.lstm_seq import ops as lstm_ops
+        hs = lstm_ops.lstm_seq(xs[:, None, :], mask[:, None],
+                               p["wx"], p["wh"], p["b"])
+        return hs[:, 0]
 
     # NOTE (§Perf H3a, REFUTED): hoisting the input projection x@Wx out
     # of the scan into one batched matmul *increased* per-step HLO bytes

@@ -175,6 +175,33 @@ def replay_sample(buf: dict, key, batch_size: int) -> dict:
     return _gather(buf, idx)
 
 
+def replay_sample_global(buf: dict, key, per_device: int,
+                         axis_name: str) -> dict:
+    """Globally-sampled minibatch under a mapped device axis.
+
+    Each device draws ``per_device`` uniform indices from its OWN ring
+    (``key`` must be device-folded so the draws decorrelate) and the
+    sampled rows are ``all_gather``'d along ``axis_name`` in device
+    order: every device returns the identical
+    ``(num_devices * per_device, ...)`` batch spanning ALL devices'
+    experience pools — the union pool, not D disjoint local ones.
+
+    Equivalence to a single-ring oracle: by the read-ring invariant
+    (module docstring) each local ring is bit-identical to a single
+    ring fed its own batches; when the local capacity is a multiple of
+    the per-round write size ``n``, local slot ``s`` of device ``d``
+    holds exactly the row a ``num_devices * capacity`` oracle ring —
+    fed every device's round batches in device-major round order —
+    holds at slot ``(s // n * num_devices + d) * n + s % n``.  The
+    gathered batch therefore IS a sample of that oracle ring (tested
+    in ``tests/test_train_sharded.py``).
+    """
+    local = replay_sample(buf, key, per_device)
+    return jax.tree.map(
+        lambda x: jax.lax.all_gather(x, axis_name, axis=0, tiled=True),
+        local)
+
+
 class DeviceReplay:
     """Stateful convenience wrapper over the functional device buffer."""
 

@@ -26,6 +26,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import policy as P
 from repro.sim.env import SchedulingEnv
@@ -95,9 +97,11 @@ def make_rollout_batch(env: SchedulingEnv, pcfg: P.PolicyConfig,
     is drawn in one vectorized call.
 
     With ``devices`` (a list of >1 JAX devices) the batch additionally
-    shards over a ``pmap`` device axis — episodes are independent, so
-    experience collection is embarrassingly data-parallel (batch must
-    divide evenly by the device count).
+    shards over a 1-D device mesh via ``shard_map`` — episodes are
+    independent, so experience collection is embarrassingly
+    data-parallel: the leading batch axis maps with
+    ``PartitionSpec("dev")``, no collective anywhere (batch must divide
+    evenly by the device count).
     """
     ndev = len(devices) if devices else 1
     key_ = ("rollout_batch", pcfg, collect, ndev)
@@ -111,23 +115,28 @@ def make_rollout_batch(env: SchedulingEnv, pcfg: P.PolicyConfig,
             return collect_episodes(env, pcfg, params, states, traces,
                                     key, sigma, collect)
     else:
-        @functools.partial(jax.pmap, in_axes=(None, 0, 0, 0, None),
-                           devices=devices)
-        def _prun(params, states, traces, key, sigma):
+        mesh = Mesh(np.asarray(devices), ("dev",))
+        spec, rep = PartitionSpec("dev"), PartitionSpec()
+
+        def _body(params, states, traces, keys, sigma):
+            # per-device shard: (batch/ndev, ...) rows, one folded key
             return collect_episodes(env, pcfg, params, states, traces,
-                                    key, sigma, collect)
+                                    keys[0], sigma, collect)
+
+        # check_rep=False: the engine's lax.while_loop has no shard_map
+        # replication rule (jax 0.4.x); every output carries the
+        # sharded batch axis anyway
+        _srun = jax.jit(shard_map(
+            _body, mesh=mesh, in_specs=(rep, spec, spec, spec, rep),
+            out_specs=spec, check_rep=False))
 
         def rollout_batch(params, states, traces, key, sigma):
             batch = states["t"].shape[0]
             if batch % ndev:
                 raise ValueError(f"batch {batch} not divisible by "
                                  f"{ndev} devices")
-            shard = lambda x: x.reshape((ndev, batch // ndev) + x.shape[1:])
-            out = _prun(params, jax.tree.map(shard, states),
-                        jax.tree.map(shard, traces),
-                        jax.random.split(key, ndev), sigma)
-            unshard = lambda x: x.reshape((batch,) + x.shape[2:])
-            return jax.tree.map(unshard, out)
+            return _srun(params, states, traces,
+                         jax.random.split(key, ndev), sigma)
 
     cache[key_] = rollout_batch
     return rollout_batch

@@ -29,21 +29,29 @@ round for sigma decay + logging.  This module removes all of it:
   train_throughput`` instead reproduces the *pre-PR* driver loop
   (NumPy trace-gen, separate un-donated dispatches, per-round syncs).
 
-- :func:`make_sharded_train_rounds` shards the fused chunk over a
-  ``pmap`` device axis: the collection half (trace gen -> episode scan)
-  splits the episode batch embarrassingly across devices, the DDPG
-  update scan stays replicated (the policy is tiny) with per-device
-  gradients ``pmean``'d across the axis, and each device owns a
-  donated **double-buffered** replay ring pair
-  (``repro.core.replay.replay_pair_*``) so round ``t``'s update
-  sampling reads a different buffer than round ``t``'s collection
-  writes — no aliasing hazard serialises them.  Per-round keys fold in
-  the device index (:func:`shard_round_keys`) for decorrelated
+- :func:`make_sharded_train_rounds` shards the fused chunk over an
+  explicit 1-D :class:`jax.sharding.Mesh` (named axis
+  :data:`MESH_AXIS`) as ``jit``-of-``shard_map``: the collection half
+  (trace gen -> episode scan) splits the episode batch embarrassingly
+  across the mesh, each device owns a donated **double-buffered**
+  replay ring pair (``repro.core.replay.replay_pair_*``) so round
+  ``t``'s update sampling reads a different buffer than round ``t``'s
+  collection writes, and the DDPG update consumes the **global**
+  experience pool: every device samples its local read ring and the
+  sampled rows are ``all_gather``'d along the axis
+  (``replay_sample_global``), so the replicated update runs the
+  identical plain step on the identical union-pool batch — replicas
+  stay bit-identical with no gradient collective.  Per-round keys fold
+  in the device index (:func:`shard_round_keys`) for decorrelated
   exploration streams; ``--devices 1`` in the driver routes to the
   plain :func:`make_train_rounds` path, which stays the numerical
-  parity oracle.  :func:`sharded_rounds_reference` is the same sharded
-  body under ``vmap`` (same ``axis_name`` collectives) — the
-  single-device oracle for pmap parity tests.
+  parity oracle.  :func:`sharded_rounds_reference` is the same
+  per-device body under ``vmap`` (same ``axis_name`` collectives) —
+  the single-device oracle; :func:`make_pmap_train_rounds` is the
+  retiring PR 6 ``pmap`` arm (local sampling + ``pmean``'d grads),
+  kept ONE migration-window PR as the cross-implementation parity
+  oracle, equal to the mesh path up to float reassociation on the same
+  sample keys.
 
 Donation contract: the ``state`` and ``buf`` arguments of the returned
 callables are consumed — always rebind to the returned values (the
@@ -58,6 +66,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import ddpg as D
 from repro.core.replay import replay_add, replay_pair_step
@@ -232,11 +243,39 @@ def train_rounds_host(env: SchedulingEnv, dcfg: D.DDPGConfig, state, buf,
 
 
 # ---------------------------------------------------------------------------
-# multi-device sharded rounds (pmap over a "dev" axis)
+# mesh-sharded rounds (jit-of-shard_map over a 1-D named device mesh)
 # ---------------------------------------------------------------------------
+MESH_AXIS = "dev"
+
+
+def make_device_mesh(devices=None) -> Mesh:
+    """1-D device mesh over the named :data:`MESH_AXIS` axis.
+
+    ``devices`` defaults to all local devices; the driver passes
+    ``jax.local_devices()[:N]`` for ``--devices N``.  The explicit mesh
+    is what ``pmap`` could never give us: a second named axis (device x
+    fleet for the generalist) composes by adding a mesh dimension, not
+    by rewriting the trainer.
+    """
+    devices = list(devices) if devices is not None else jax.local_devices()
+    return Mesh(np.array(devices), (MESH_AXIS,))
+
+
 def replicate(tree, devices):
     """Copy a single-device pytree onto every device (leading D axis)."""
     return jax.device_put_replicated(tree, list(devices))
+
+
+def mesh_replicate(tree, mesh: Mesh):
+    """Stack a single-device pytree D times with the leading axis
+    sharded over the mesh axis — the :func:`make_sharded_train_rounds`
+    twin of :func:`replicate` (same (D, ...) calling convention, but
+    laid out for the mesh so shard_map moves no data)."""
+    ndev = mesh.devices.size
+    spec = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+    return jax.tree.map(
+        lambda x: jax.device_put(
+            jnp.broadcast_to(x[None], (ndev,) + x.shape), spec), tree)
 
 
 def unreplicate(tree):
@@ -249,20 +288,26 @@ def _sharded_round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                         num_devices: int, batch_episodes: int,
                         num_updates: int, batch_size: int,
                         sigma_min: float, sigma_decay: float,
-                        arrivals=None, axis_name: str = "dev"):
+                        arrivals=None, axis_name: str = MESH_AXIS,
+                        update_gather: bool = True):
     """Per-device round body run under a mapped ``axis_name`` axis.
 
     Each device collects ``batch_episodes // num_devices`` episodes with
     its own device-folded key (embarrassingly parallel), runs the
-    replicated update scan on ``batch_size // num_devices`` local
-    samples with cross-device gradient averaging (``ddpg_update_rounds``
-    with ``axis_name``), and advances its private double-buffered ring
-    pair — the update samples the ``read`` ring while the round's fresh
-    transitions land in the ``write`` ring, so XLA may overlap the two
-    (see ``repro.core.replay``).  Sigma decays by the GLOBAL episode
-    count so the exploration schedule matches the single-device run.
-    Episode metrics are ``pmean``'d: every replica returns the global
-    round averages.
+    replicated update scan, and advances its private double-buffered
+    ring pair — the update samples the ``read`` ring while the round's
+    fresh transitions land in the ``write`` ring, so XLA may overlap
+    the two (see ``repro.core.replay``).
+
+    ``update_gather`` selects the update's sampling topology
+    (``ddpg_update_rounds``): True (the mesh path) all-gathers each
+    device's ``batch_size // num_devices`` sampled rows into the global
+    union-pool minibatch every device updates on identically; False
+    (the retiring pmap arm) updates from local samples with
+    cross-device gradient averaging.  Sigma decays by the GLOBAL
+    episode count so the exploration schedule matches the single-device
+    run.  Episode metrics are ``pmean``'d: every replica returns the
+    global round averages.
     """
     pcfg = dcfg.policy
     per_eps = batch_episodes // num_devices
@@ -282,9 +327,10 @@ def _sharded_round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
         flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in trans.items()}
 
         def upd(st):
-            st2, infos = D.ddpg_update_rounds(st, dcfg, pair["read"], kup,
-                                              num_updates, per_bs,
-                                              axis_name)
+            st2, infos = D.ddpg_update_rounds(
+                st, dcfg, pair["read"], kup, num_updates, per_bs,
+                axis_name=None if update_gather else axis_name,
+                gather_axis=axis_name if update_gather else None)
             return st2, {k: infos[k][-1] for k in INFO_KEYS}
 
         def no_upd(st):
@@ -320,47 +366,118 @@ def _sharded_scan(round_fn):
     return _scan
 
 
+def _jit_shard_map(scan_fn, mesh: Mesh, *, n_args: int,
+                   sharded: tuple[int, ...]):
+    """Wrap a per-device chunk scan as ``jit``-of-``shard_map``.
+
+    Arguments at the ``sharded`` positions carry a leading ``D`` axis
+    split over the mesh axis (each shard peels its singleton slice so
+    the body sees pmap-style unbatched per-device arrays); the rest are
+    replicated as-is (``do_update``, the generalist's shared fleet
+    keys).  All outputs return with the leading ``D`` axis.  ``state``
+    and ``pair`` (args 0 and 1) are donated.
+    """
+    axis = mesh.axis_names[0]
+    spec, rep = PartitionSpec(axis), PartitionSpec()
+    sharded = frozenset(sharded)
+
+    def body(*args):
+        peeled = tuple(jax.tree.map(lambda x: x[0], a) if i in sharded
+                       else a for i, a in enumerate(args))
+        out = scan_fn(*peeled)
+        return jax.tree.map(lambda x: x[None], out)
+
+    in_specs = tuple(spec if i in sharded else rep for i in range(n_args))
+    # check_rep=False: the engine's lax.while_loop has no replication
+    # rule yet (jax 0.4.x); every output legitimately carries the
+    # device axis, so nothing is lost by skipping the check
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=(spec, spec, spec, spec),
+                             check_rep=False),
+                   donate_argnums=(0, 1))
+
+
 def make_sharded_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
-                              devices, batch_episodes: int,
+                              mesh: Mesh, batch_episodes: int,
                               num_updates: int, batch_size: int,
                               sigma_min: float, sigma_decay: float,
                               arrivals=None):
-    """A chunk of R rounds sharded over ``devices`` in one pmap dispatch.
+    """A chunk of R rounds sharded over ``mesh`` in one jitted
+    ``shard_map`` dispatch (the pmap successor — pmap is
+    soft-deprecated and caps at a single axis; the named mesh is what
+    the 2-D device x fleet extension hangs off).
 
     Returns ``rounds_fn(state, pair, keys, sigma, do_update)`` ->
     ``(state, pair, sigma, metrics)`` where every array carries a
-    leading ``D = len(devices)`` axis except ``do_update`` (an (R,)
-    bool vector broadcast to all devices):
+    leading ``D = mesh.devices.size`` axis split over the mesh axis
+    except ``do_update`` (an (R,) bool vector replicated to all
+    devices):
 
-    - ``state``: replicated ``DDPGState`` (:func:`replicate`); stays
-      bit-identical across replicas because gradients are cross-device
-      averaged before Adam — :func:`unreplicate` for checkpoints/eval;
+    - ``state``: replicated ``DDPGState`` (:func:`mesh_replicate`);
+      stays BIT-identical across replicas because every device runs
+      the identical update on the identical all-gathered global batch
+      — :func:`unreplicate` for checkpoints/eval;
     - ``pair``: per-device double-buffered ring pairs
-      (``replay_pair_init`` then :func:`replicate` of a fresh pair —
-      device streams diverge as soon as the first round writes);
+      (``replay_pair_init`` then :func:`mesh_replicate` of a fresh
+      pair — device streams diverge as soon as the first round
+      writes);
     - ``keys``: (D, R, 2) from :func:`shard_round_keys`;
     - ``sigma``: replicated (D,) scalar;
     - ``metrics``: per-round dict stacked (D, R); episode metrics are
       pmean'd so row 0 equals the global average.
 
     ``state`` and ``pair`` are donated (rebind!).  Collection shards
-    over devices (``batch_episodes / D`` episodes each); the update
-    samples ``batch_size / D`` per device from the local read ring.
-    One compile per distinct (devices, R) — cached on the env.
+    over devices (``batch_episodes / D`` episodes each); each update
+    samples ``batch_size / D`` rows per device and ``all_gather``s
+    them into the global minibatch (``replay_sample_global``) — the
+    update consumes the union experience pool, not D disjoint local
+    pools, at the memory cost of one replicated ``batch_size``
+    minibatch per device (a few hundred KB at training shapes).  One
+    compile per distinct (mesh, R) — cached on the env.
+    """
+    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
+              batch_size=batch_size, sigma_min=sigma_min,
+              sigma_decay=sigma_decay, arrivals=arrivals)
+    key_ = _cache_key("shardmap_rounds", dcfg, kw) + (mesh,)
+    cache = _runner_cache(env)
+    if key_ not in cache:
+        round_fn = _sharded_round_body(
+            env, dcfg, num_devices=mesh.devices.size,
+            axis_name=mesh.axis_names[0], update_gather=True, **kw)
+        cache[key_] = _jit_shard_map(_sharded_scan(round_fn), mesh,
+                                     n_args=5, sharded=(0, 1, 2, 3))
+    return cache[key_]
+
+
+def make_pmap_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
+                           devices, batch_episodes: int,
+                           num_updates: int, batch_size: int,
+                           sigma_min: float, sigma_decay: float,
+                           arrivals=None):
+    """The retiring PR 6 pmap arm: local update sampling + ``pmean``'d
+    gradients (``update_gather=False``), same signature and (D, ...)
+    layout as :func:`make_sharded_train_rounds` with :func:`replicate`
+    instead of :func:`mesh_replicate`.
+
+    Kept ONE migration-window PR as the cross-implementation parity
+    oracle for the mesh path (equal to it up to float reassociation on
+    the same sample keys — ``tests/test_train_sharded.py``) and as the
+    bench's overhead reference arm; scheduled for removal together
+    with the ``pmap-migration`` CI-lint allowance in ``scripts/ci.sh``.
     """
     devices = tuple(devices)
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
               sigma_decay=sigma_decay, arrivals=arrivals)
-    key_ = _cache_key("sharded_rounds", dcfg, kw) + (devices,)
+    key_ = _cache_key("pmap_rounds", dcfg, kw) + (devices,)
     cache = _runner_cache(env)
     if key_ not in cache:
         round_fn = _sharded_round_body(env, dcfg,
-                                       num_devices=len(devices), **kw)
-        cache[key_] = jax.pmap(_sharded_scan(round_fn), axis_name="dev",
-                               devices=devices,
-                               in_axes=(0, 0, 0, 0, None),
-                               donate_argnums=(0, 1))
+                                       num_devices=len(devices),
+                                       update_gather=False, **kw)
+        cache[key_] = jax.pmap(  # pmap-migration: PR 6 oracle, one-PR window
+            _sharded_scan(round_fn), axis_name=MESH_AXIS, devices=devices,
+            in_axes=(0, 0, 0, 0, None), donate_argnums=(0, 1))
     return cache[key_]
 
 
@@ -368,26 +485,29 @@ def sharded_rounds_reference(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                              num_devices: int, batch_episodes: int,
                              num_updates: int, batch_size: int,
                              sigma_min: float, sigma_decay: float,
-                             arrivals=None):
+                             arrivals=None, update_gather: bool = True):
     """Single-device vmap oracle for :func:`make_sharded_train_rounds`.
 
     The SAME per-device round body mapped with ``jax.vmap(...,
-    axis_name="dev")`` instead of pmap — the ``pmean`` collectives
-    resolve identically, so on matching inputs the results must agree
-    up to XLA fusion-level float differences regardless of how many
-    physical devices exist.  Same signature and (D, R) output layout as
-    the pmap'd callable; runs on the default device.
+    axis_name=MESH_AXIS)`` instead of shard_map — the ``pmean`` /
+    ``all_gather`` collectives resolve identically, so on matching
+    inputs the results must agree up to XLA fusion-level float
+    differences regardless of how many physical devices exist.  Same
+    signature and (D, R) output layout as the mesh callable; runs on
+    the default device.  ``update_gather=False`` instead mirrors the
+    retiring :func:`make_pmap_train_rounds` arm.
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
               sigma_decay=sigma_decay, arrivals=arrivals)
-    key_ = _cache_key("sharded_rounds_ref", dcfg, kw) + (num_devices,)
+    key_ = _cache_key("sharded_rounds_ref", dcfg, kw) + (num_devices,
+                                                         update_gather)
     cache = _runner_cache(env)
     if key_ not in cache:
         round_fn = _sharded_round_body(env, dcfg, num_devices=num_devices,
-                                       **kw)
+                                       update_gather=update_gather, **kw)
         vround = jax.vmap(round_fn, in_axes=(0, 0, 0, 0, None),
-                          axis_name="dev")
+                          axis_name=MESH_AXIS)
 
         def _scan(state, pair, keys, sigma, do_update):
             def step(carry, xs):
@@ -397,7 +517,7 @@ def sharded_rounds_reference(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                 return (st, pr, sg), m
 
             # scan over rounds: keys (D, R, 2) -> (R, D, 2) for the scan,
-            # metrics back to the pmap layout (D, R, ...)
+            # metrics back to the mesh layout (D, R, ...)
             (state, pair, sigma), metrics = jax.lax.scan(
                 step, (state, pair, sigma),
                 (jnp.swapaxes(keys, 0, 1), do_update))

@@ -31,14 +31,20 @@ Knobs:
   requested fleet; raise it to leave headroom for larger platforms);
 - ``--batch-episodes N``  episodes collected per training round;
 - ``--devices N``         shard each fused round (and chunk scan) over N
-  local devices via ``pmap``: collection splits the episode batch,
-  the tiny DDPG update replicates with cross-device-averaged
-  gradients, and each device owns a donated double-buffered replay
-  ring pair (``core.train.make_sharded_train_rounds``); composes with
-  chunked rounds, auto-resume, and checkpointing — checkpoints stay
+  local devices via ``jit``-of-``shard_map`` on an explicit 1-D device
+  mesh (``core.train.make_device_mesh`` / ``MESH_AXIS``): collection
+  splits the episode batch, each device owns a donated double-buffered
+  replay ring pair, and every DDPG update ``all_gather``s the devices'
+  sampled rows into one global union-pool minibatch so the replicated
+  learner state stays bit-identical across devices
+  (``core.train.make_sharded_train_rounds``); composes with chunked
+  rounds, auto-resume, and checkpointing — checkpoints stay
   single-device arrays, so a run may restore at any ``--devices``.
   ``--devices 1`` (default) is the plain fused path and the numerical
   parity oracle (``tests/test_train_sharded.py``);
+- ``--sharded-impl IMPL`` ``shard_map`` (default) | ``pmap`` — the
+  retiring PR 6 pmap arm (local update samples + pmean'd gradients),
+  kept one migration-window PR as a cross-implementation oracle;
 - ``--scenario NAME``     arrival-process preset (``default``,
   ``steady``, ``burst``, ``diurnal``, ``heavy_tail`` — see
   ``repro.sim.arrivals``; the fused round draws traces on device via
@@ -83,13 +89,16 @@ from repro.core.generalist import (GeneralistSpec, build_padded_envs,
                                    generalist_replay_init,
                                    make_generalist_round,
                                    make_generalist_rounds,
+                                   make_pmap_generalist_rounds,
                                    make_sharded_generalist_rounds)
 from repro.core.replay import replay_init, replay_pair_init
 from repro.core.rollout import evaluate_batch, evaluate_batch_baseline
-from repro.core.train import (INFO_KEYS, make_sharded_train_rounds,
+from repro.core.train import (INFO_KEYS, make_device_mesh,
+                              make_pmap_train_rounds,
+                              make_sharded_train_rounds,
                               make_train_round, make_train_rounds,
-                              replicate, round_keys, shard_round_keys,
-                              unreplicate)
+                              mesh_replicate, replicate, round_keys,
+                              shard_round_keys, unreplicate)
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.env import EnvConfig, SchedulingEnv
 from repro.workloads import build_registry
@@ -120,9 +129,12 @@ class TrainConfig:
     hidden: int = 64
     episodes: int = 150
     batch_episodes: int = 8
-    # shard each fused round over this many local devices (pmap; 1 =
-    # the single-device fused path, the numerical parity oracle)
+    # shard each fused round over this many local devices (1 = the
+    # single-device fused path, the numerical parity oracle)
     devices: int = 1
+    # shard_map (jit-of-shard_map on an explicit mesh, all-gathered
+    # global update minibatches) | pmap (retiring PR 6 arm)
+    sharded_impl: str = "shard_map"
     updates_per_episode: int = 30
     batch_size: int = 32
     replay_capacity: int = 4000
@@ -241,8 +253,11 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
             f"fit --replay-capacity ({cfg.replay_capacity})")
     if cfg.devices < 1:
         raise ValueError(f"--devices must be >= 1, got {cfg.devices}")
+    if cfg.sharded_impl not in ("shard_map", "pmap"):
+        raise ValueError(f"--sharded-impl must be shard_map|pmap, "
+                         f"got {cfg.sharded_impl!r}")
     if cfg.devices > 1:
-        # fail fast with actionable messages, not inside pmap tracing
+        # fail fast with actionable messages, not inside shard_map tracing
         ndev = jax.local_device_count()
         if cfg.devices > ndev:
             raise ValueError(
@@ -345,11 +360,19 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
 
     sharded = cfg.devices > 1
     devs = jax.local_devices()[:cfg.devices]
+    use_mesh = cfg.sharded_impl == "shard_map"
+    mesh = make_device_mesh(devs) if sharded and use_mesh else None
+    # replication layout follows the sharded impl: mesh_replicate lays
+    # the leading D axis out over the mesh axis so shard_map moves no
+    # data; replicate targets the pmap arm's per-device buffers
+    repl = ((lambda t: mesh_replicate(t, mesh)) if use_mesh
+            else (lambda t: replicate(t, devs)))
     if not sharded and len(jax.local_devices()) > 1:
-        # --devices N pmap-shards the fused round over N local devices
-        # (collection splits, the update replicates with pmean'd grads,
-        # per-device double-buffered rings; see docs/ARCHITECTURE.md
-        # "sharded round"); default is the single-device fused path
+        # --devices N shards the fused round over N local devices
+        # (collection splits, the update consumes all-gathered global
+        # minibatches, per-device double-buffered rings; see
+        # docs/ARCHITECTURE.md "Mesh-sharded rounds"); default is the
+        # single-device fused path
         log_fn(f"[note] {len(jax.local_devices())} local devices; pass "
                f"--devices N to shard the fused rounds over them")
 
@@ -361,7 +384,7 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         # per-device double-buffered ring pair; checkpoints never hold
         # replay, so restore stays device-count-agnostic
         round_size = (cfg.batch_episodes // cfg.devices) * cfg.periods
-        buf = replicate(replay_pair_init(buf, round_size), devs)
+        buf = repl(replay_pair_init(buf, round_size))
     os.makedirs(cfg.outdir, exist_ok=True)
     logf = open(os.path.join(cfg.outdir, "log.jsonl"), "a")
     if baseline_scores:
@@ -381,8 +404,10 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
     if kind == "generalist":
         make_round = lambda **kw: make_generalist_round(envs, dcfg, **kw)
         make_rounds = lambda **kw: make_generalist_rounds(envs, dcfg, **kw)
-        make_sharded = lambda **kw: make_sharded_generalist_rounds(
-            envs, dcfg, devices=devs, **kw)
+        make_sharded = ((lambda **kw: make_sharded_generalist_rounds(
+            envs, dcfg, mesh=mesh, **kw)) if use_mesh else
+            (lambda **kw: make_pmap_generalist_rounds(
+                envs, dcfg, devices=devs, **kw)))
 
         def eval_policy_fn(params, seeds):
             """Mean metrics across every training fleet (+ per-fleet)."""
@@ -396,8 +421,10 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
     else:
         make_round = lambda **kw: make_train_round(env, dcfg, **kw)
         make_rounds = lambda **kw: make_train_rounds(env, dcfg, **kw)
-        make_sharded = lambda **kw: make_sharded_train_rounds(
-            env, dcfg, devices=devs, **kw)
+        make_sharded = ((lambda **kw: make_sharded_train_rounds(
+            env, dcfg, mesh=mesh, **kw)) if use_mesh else
+            (lambda **kw: make_pmap_train_rounds(
+                env, dcfg, devices=devs, **kw)))
         eval_policy_fn = lambda params, seeds: evaluate_batch(
             env, pcfg, params, seeds)
 
@@ -405,8 +432,8 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         # learner state and sigma replicate once (and once more after
         # any restore above); chunk boundaries unreplicate for
         # eval/checkpointing so saved artifacts stay single-device
-        state = replicate(state, devs)
-        sigma = replicate(sigma, devs)
+        state = repl(state)
+        sigma = repl(sigma)
 
     ckpt_meta = dict(fleet=cfg.fleet, policy_kind=kind,
                      hidden=cfg.hidden, feat_dim=pcfg.feat_dim,
@@ -424,9 +451,10 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         keys = round_keys(cfg.seed + 1, chunk["round0"], len(rounds))
         t0 = time.time()
         if sharded:
-            # chunk sharded over the device axis: ONE pmap dispatch;
-            # keys fold in the device index, the generalist's fleet
-            # draw uses the shared (un-sharded) round keys
+            # chunk sharded over the device axis: ONE jitted shard_map
+            # (or retiring pmap) dispatch; keys fold in the device
+            # index, the generalist's fleet draw uses the shared
+            # (replicated, un-sharded) round keys
             rounds_fn = make_sharded(**trainer_kw(n))
             dkeys = shard_round_keys(keys, cfg.devices)
             args = ((state, buf, dkeys, keys, sigma, jnp.asarray(flags))
@@ -523,12 +551,16 @@ _HELP = {
     "scenario": "arrival preset: default | steady | burst | diurnal | "
                 "heavy_tail (sim.arrivals)",
     "batch_episodes": "episodes collected per fused training round",
-    "devices": "shard each fused round over N local devices (pmap: "
-               "collection splits, update replicates with pmean'd grads, "
+    "devices": "shard each fused round over N local devices "
+               "(jit-of-shard_map on a 1-D mesh: collection splits, each "
+               "update all-gathers a global union-pool minibatch, "
                "per-device double-buffered replay rings); requires "
                "batch-episodes/batch-size/replay-capacity divisible by N "
                "and N <= jax.local_device_count(); 1 = single-device "
                "fused path (parity oracle)",
+    "sharded_impl": "shard_map (default) | pmap (retiring PR 6 arm: local "
+                    "update samples + pmean'd gradients; one "
+                    "migration-window PR)",
     "eval_baselines": 'comma list scored on the eval seeds before '
                       'training, e.g. "fcfs,herald,magma" ("" = skip)',
     "fail_at": "inject a crash at this episode (fault-tolerance tests)",

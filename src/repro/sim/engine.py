@@ -245,17 +245,27 @@ def simulate_jax(valid, assign, prio, cost, bw, dep, ready, sa_free, B,
     return start, finish
 
 
-@functools.partial(jax.jit, static_argnames=("num_sas", "max_iters"))
+@functools.partial(jax.jit, static_argnames=("num_sas", "max_iters",
+                                             "stop_start_after"))
 def simulate_jax_segments(valid, assign, prio, cost, bw, dep, ready, sa_free,
-                          B, *, num_sas: int, max_iters: int | None = None):
+                          B, *, num_sas: int, max_iters: int | None = None,
+                          stop_start_after: float | None = None):
     """Seed implementation of :func:`simulate_jax` (jax.ops.segment_*).
 
     Kept verbatim as (a) the "before" arm of
     ``benchmarks/rollout_throughput.py`` — XLA CPU lowers the segment
     scatters to serial per-element loops, which is exactly the
     behaviour the one-hot rewrite above removes — and (b) a third
-    engine implementation for parity cross-checks in tests.
+    engine implementation for parity cross-checks in tests.  It is
+    signature-compatible with :func:`simulate_jax` (callers swap the
+    two), but the serving-only ``stop_start_after`` early exit is not
+    implemented here — the legacy arm never serves, so any non-``None``
+    value is a trace-time error rather than a silent full run.
     """
+    if stop_start_after is not None:
+        raise ValueError("simulate_jax_segments has no stop_start_after "
+                         "early exit (legacy engine; training/benchmark "
+                         "paths only)")
     n = valid.shape[0]
     M = num_sas
     if max_iters is None:

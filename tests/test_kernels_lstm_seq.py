@@ -51,6 +51,36 @@ def test_lstm_seq_matches_policy_scan():
                                atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("apply", ["actor", "critic"])
+def test_use_pallas_policy_parity(apply):
+    """``use_pallas=True`` routes ``_lstm_scan`` through the fused
+    kernel; the full actor/critic outputs must match the scan
+    reference, including the ragged masked tail."""
+    from repro.core import policy as P
+    kw = dict(feat_dim=16, act_dim=7, hidden=64)
+    ref_cfg = P.PolicyConfig(**kw)
+    pl_cfg = P.PolicyConfig(**kw, use_pallas=True)
+    T, B = 9, 6
+    ka, kf, km, kx = jax.random.split(KEY, 4)
+    feats = jax.random.normal(kf, (B, T, 16))
+    lens = jax.random.randint(km, (B,), 1, T + 1)
+    mask = jnp.arange(T)[None, :] < lens[:, None]
+    if apply == "actor":
+        params = P.init_actor(ka, ref_cfg)
+        fn = lambda cfg: jax.vmap(P.actor_apply,
+                                  in_axes=(None, None, 0, 0))(
+            params, cfg, feats, mask)
+    else:
+        params = P.init_critic(ka, ref_cfg)
+        acts = jnp.tanh(jax.random.normal(kx, (B, T - 1, 7)))
+        fn = lambda cfg: jax.vmap(P.critic_apply,
+                                  in_axes=(None, None, 0, 0, 0))(
+            params, cfg, feats, acts, mask)
+    np.testing.assert_allclose(np.asarray(fn(pl_cfg)),
+                               np.asarray(fn(ref_cfg)),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_masked_carry_semantics():
     """A fully-masked step must pass h through unchanged."""
     T, B, F, H = 4, 2, 8, 32

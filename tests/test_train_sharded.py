@@ -1,10 +1,12 @@
 """Sharded trainer tests: double-buffered replay ring pair semantics
 (masked add, read-ring invariant under donation and wrap-around),
-device-folded key streams, driver --devices validation and routing, and
-subprocess pmap-vs-vmap-oracle parity at 2 forced host devices
-(metrics, final DDPGState, and ring contents under the fixed
-device-keyed stream) plus a generalist 2-device x 2-fleet driver smoke
-and a cross-device-count checkpoint resume."""
+device-folded key streams, global-gather sampling vs the single-ring
+oracle, driver --devices validation and routing, and subprocess parity
+at 2 forced host devices — the mesh shard_map path vs the vmap oracle
+AND the retiring pmap arm (metrics, final DDPGState, replica
+bit-identity, and ring contents under the fixed device-keyed stream) —
+plus a generalist 2-device x 2-fleet driver smoke and cross-device-count
+checkpoint resumes in both directions."""
 import json
 import os
 import subprocess
@@ -17,9 +19,11 @@ import pytest
 
 from repro.core import ddpg as D
 from repro.core import policy as P
-from repro.core.replay import (replay_add_batch, replay_add_masked,
-                               replay_fields, replay_init, replay_pair_init,
-                               replay_pair_step)
+from repro.core.replay import (replay_add, replay_add_batch,
+                               replay_add_masked, replay_fields,
+                               replay_init, replay_pair_init,
+                               replay_pair_step, replay_sample,
+                               replay_sample_global)
 from repro.core.train import round_keys, shard_round_keys, train_rounds_scan
 from repro.launch.rl_train import TrainConfig, build_env, train
 from repro.sim.env import EnvConfig
@@ -115,6 +119,52 @@ def test_shard_round_keys_shape_distinct_and_resumable():
 
 
 # ---------------------------------------------------------------------------
+# global-gather sampling vs a single-ring oracle
+# ---------------------------------------------------------------------------
+def test_global_sample_is_single_ring_oracle_sample():
+    """``replay_sample_global``'s gathered minibatch must BE a sample of
+    one big ring fed every device's per-round batches in device-major
+    round order: local slot ``s`` of device ``d`` holds the oracle's
+    slot ``(s//n * D + d) * n + s%n`` (n = per-round write size,
+    cap % n == 0).  Runs under vmap's named-axis collective — the same
+    ``all_gather`` the mesh path lowers, no forced devices needed."""
+    Dn, cap, n, rounds, per_bs = 2, 12, 4, 5, 5
+    pairs = [replay_pair_init(replay_init(cap, 3, 2, 1), n)
+             for _ in range(Dn)]
+    oracle = replay_init(cap * Dn, 3, 2, 1)
+    step = jax.jit(replay_pair_step)
+    for r in range(rounds):                 # 20 writes/device > cap: wraps
+        batches = [_batch([float(100 * d + 10 * r + i) for i in range(n)])
+                   for d in range(Dn)]
+        pairs = [step(p, b) for p, b in zip(pairs, batches)]
+        for b in batches:                   # device-major round order
+            oracle = replay_add_batch(oracle, b)
+    # the affine slot map holds row-for-row, wrap-around included
+    o_r = np.asarray(oracle["r"])
+    s = np.arange(cap)
+    for d, p in enumerate(pairs):
+        np.testing.assert_array_equal(np.asarray(p["read"]["r"]),
+                                      o_r[(s // n * Dn + d) * n + s % n])
+    # the gathered global batch == the SAME draws read out of the oracle
+    # ring through the slot map, concatenated in device order
+    stacked = jax.tree.map(lambda *x: jnp.stack(x),
+                           *[p["read"] for p in pairs])
+    keys = jax.random.split(jax.random.PRNGKey(3), Dn)
+    got = jax.vmap(lambda b, k: replay_sample_global(b, k, per_bs, "dev"),
+                   axis_name="dev")(stacked, keys)
+    rows = []
+    for d in range(Dn):                     # recover each device's draws
+        idx = np.asarray(replay_sample(
+            dict(size=jnp.int32(cap), r=jnp.arange(cap, dtype=jnp.float32)),
+            keys[d], per_bs)["r"]).astype(int)
+        rows.append(o_r[(idx // n * Dn + d) * n + idx % n])
+    want = np.concatenate(rows)
+    assert got["r"].shape == (Dn, Dn * per_bs)
+    for d in range(Dn):                     # identical on every device
+        np.testing.assert_array_equal(np.asarray(got["r"][d]), want)
+
+
+# ---------------------------------------------------------------------------
 # driver: --devices validation and single-device routing
 # ---------------------------------------------------------------------------
 def test_devices_exceeding_local_count_errors_clearly(tmp_path):
@@ -169,8 +219,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import ddpg as D, policy as P
 from repro.core.replay import replay_fields, replay_init, replay_pair_init
-from repro.core.train import (make_sharded_train_rounds, replicate,
-                              round_keys, shard_round_keys,
+from repro.core.train import (make_device_mesh, make_pmap_train_rounds,
+                              make_sharded_train_rounds, mesh_replicate,
+                              replicate, round_keys, shard_round_keys,
                               sharded_rounds_reference, unreplicate)
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.env import EnvConfig, SchedulingEnv
@@ -198,10 +249,11 @@ def fresh():
         replay_init(16, env.seq_len, env.feat_dim, env.act_dim), round_size)
     return state, pair                      # cap 16 < 4*6 writes: wraps
 
+mesh = make_device_mesh(DEV)
 state, pair = fresh()
-fn = make_sharded_train_rounds(env, dcfg, devices=DEV, **KW)
-s1, p1, sg1, m1 = fn(replicate(state, DEV), replicate(pair, DEV), dkeys,
-                     replicate(jnp.float32(0.4), DEV), flags)
+fn = make_sharded_train_rounds(env, dcfg, mesh=mesh, **KW)
+s1, p1, sg1, m1 = fn(mesh_replicate(state, mesh), mesh_replicate(pair, mesh),
+                     dkeys, mesh_replicate(jnp.float32(0.4), mesh), flags)
 
 state, pair = fresh()
 stack2 = lambda t: jax.tree.map(lambda x: jnp.stack([x, x]), t)
@@ -209,27 +261,39 @@ ref = sharded_rounds_reference(env, dcfg, num_devices=2, **KW)
 s2, p2, sg2, m2 = ref(stack2(state), stack2(pair), dkeys,
                       jnp.stack([jnp.float32(0.4)] * 2), flags)
 
+# the retiring pmap arm (local sampling + gradient pmean) on the same
+# device-keyed stream — math-equal to the gathered global batch up to
+# float reassociation (equal shards: mean-of-means == global mean)
+state, pair = fresh()
+pm = make_pmap_train_rounds(env, dcfg, devices=DEV, **KW)
+s3, p3, sg3, m3 = pm(replicate(state, DEV), replicate(pair, DEV), dkeys,
+                     replicate(jnp.float32(0.4), DEV), flags)
+
 for k in m1:
     assert np.allclose(np.asarray(m1[k]), np.asarray(m2[k]), atol=1e-4), k
-deltas = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
-                      unreplicate(s1).actor, unreplicate(s2).actor)
-assert max(jax.tree.leaves(deltas)) < 1e-4
-# the replicated learner never diverges across devices
+    assert np.allclose(np.asarray(m1[k]), np.asarray(m3[k]), atol=1e-4), k
+for other in (s2, s3):
+    deltas = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                          unreplicate(s1).actor, unreplicate(other).actor)
+    assert max(jax.tree.leaves(deltas)) < 1e-4
+# gathered global batches make every replica consume identical inputs:
+# the shard_map learner must stay BIT-identical across devices
 for leaf in jax.tree.leaves(jax.tree.map(
         lambda x: float(jnp.max(jnp.abs(x[0] - x[1]))), s1.actor)):
     assert leaf == 0.0
-# ring contents: the fixed device-keyed stream makes pmap and the vmap
-# oracle fill identical per-device rings (wrap-around included)
-for ring in ("read", "write"):
-    for k in replay_fields(p1[ring]):
-        a, b = np.asarray(p1[ring][k]), np.asarray(p2[ring][k])
-        if a.dtype == bool:
-            assert np.array_equal(a, b), (ring, k)
-        else:
-            assert np.allclose(a, b, atol=1e-6), (ring, k)
-    for k in ("ptr", "size"):
-        assert np.array_equal(np.asarray(p1[ring][k]),
-                              np.asarray(p2[ring][k])), (ring, k)
+# ring contents: the fixed device-keyed stream makes shard_map, pmap
+# and the vmap oracle fill identical per-device rings (wrap included)
+for p_other in (p2, p3):
+    for ring in ("read", "write"):
+        for k in replay_fields(p1[ring]):
+            a, b = np.asarray(p1[ring][k]), np.asarray(p_other[ring][k])
+            if a.dtype == bool:
+                assert np.array_equal(a, b), (ring, k)
+            else:
+                assert np.allclose(a, b, atol=1e-6), (ring, k)
+        for k in ("ptr", "size"):
+            assert np.array_equal(np.asarray(p1[ring][k]),
+                                  np.asarray(p_other[ring][k])), (ring, k)
 assert int(p1["read"]["size"][0]) == 16     # wrapped: capacity reached
 print("PARITY_OK")
 """
@@ -246,6 +310,8 @@ checks = [
     (dict(devices=2, batch_episodes=2, replay_capacity=121),
      "replay-capacity 121"),
     (dict(devices=2, batch_episodes=2, episodes=5), "multiple of"),
+    (dict(devices=2, batch_episodes=2, sharded_impl="spmd"),
+     "--sharded-impl must be shard_map|pmap"),
 ]
 for kw, frag in checks:
     try:
@@ -259,7 +325,7 @@ print("VALIDATION_OK")
 
 
 @pytest.mark.slow
-def test_sharded_pmap_matches_vmap_oracle_subproc():
+def test_shard_map_matches_pmap_and_vmap_oracle_subproc():
     r = subprocess.run([sys.executable, "-c", _PARITY_SCRIPT], env=ENV2,
                        cwd=REPO, capture_output=True, text=True, timeout=540)
     assert "PARITY_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-1500:]
@@ -291,17 +357,31 @@ def test_generalist_two_device_two_fleet_smoke(tmp_path):
 
 @pytest.mark.slow
 def test_checkpoint_resume_across_device_counts(tmp_path):
-    """Checkpoints are single-device arrays: train sharded at
-    --devices 2, resume the same outdir at --devices 1."""
+    """Checkpoints are single-device arrays, so device count is a
+    per-launch choice: train sharded at --devices 2 and resume the same
+    outdir at --devices 1, AND the reverse — a single-device run picked
+    up by a 2-device mesh."""
+    env1 = {**ENV2, "XLA_FLAGS": "--xla_force_host_platform_device_count=1"}
     out = str(tmp_path / "ck")
     base = [sys.executable, "-m", "repro.launch.rl_train", *SMOKE_ARGS,
             "--ckpt-every", "2", "--outdir", out]
     r = subprocess.run(base + ["--devices", "2"], env=ENV2, cwd=REPO,
                        capture_output=True, text=True, timeout=540)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
-    env1 = {**ENV2, "XLA_FLAGS": "--xla_force_host_platform_device_count=1"}
     r2 = subprocess.run(base + ["--devices", "1", "--episodes", "8"],
                         env=env1, cwd=REPO, capture_output=True, text=True,
                         timeout=540)
     assert r2.returncode == 0, r2.stdout[-2000:] + r2.stderr[-2000:]
     assert "[resume] restored checkpoint" in r2.stdout
+
+    out_b = str(tmp_path / "ck_up")
+    base_b = [sys.executable, "-m", "repro.launch.rl_train", *SMOKE_ARGS,
+              "--ckpt-every", "2", "--outdir", out_b]
+    r3 = subprocess.run(base_b + ["--devices", "1"], env=env1, cwd=REPO,
+                        capture_output=True, text=True, timeout=540)
+    assert r3.returncode == 0, r3.stdout[-2000:] + r3.stderr[-2000:]
+    r4 = subprocess.run(base_b + ["--devices", "2", "--episodes", "8"],
+                        env=ENV2, cwd=REPO, capture_output=True, text=True,
+                        timeout=540)
+    assert r4.returncode == 0, r4.stdout[-2000:] + r4.stderr[-2000:]
+    assert "[resume] restored checkpoint" in r4.stdout
