@@ -172,7 +172,7 @@ MAGMA_BENCH_CFG = BL.MagmaConfig(population=24, generations=12)
 
 def eval_policy(env: SchedulingEnv, name: str, *, workload: str,
                 seeds=range(7000, 7003), magma_cfg=None, arrivals=None,
-                magma_legacy: bool = False) -> dict:
+                churn=None, magma_legacy: bool = False) -> dict:
     """-> mean metrics for one scheduler on one env.
 
     Every policy runs through the batched device-resident runner (one
@@ -180,17 +180,24 @@ def eval_policy(env: SchedulingEnv, name: str, *, workload: str,
     and MAGMA via the scan-fused GA (``BL.make_magma_baseline``) whose
     whole generation loop executes inside the episode scan.
     ``arrivals`` overrides the arrival process (scenario sweeps) without
-    touching the compiled evaluators; ``magma_legacy=True`` forces the
-    old per-period host loop (the throughput benchmark's "before" arm).
+    touching the compiled evaluators; ``churn`` (a
+    :class:`~repro.sim.churn.ChurnConfig`) injects a per-seed fleet
+    churn schedule — also pure trace data, so the same compiled
+    evaluator serves every churn cell.  ``magma_legacy=True`` forces
+    the old per-period host loop (the throughput benchmark's "before"
+    arm; it predates churn and rejects it).
     """
+    if magma_legacy and churn is not None:
+        raise ValueError("magma_legacy host loop does not support churn")
     if name == "relmas":
         params, pcfg, info = load_relmas(env, workload)
         if info["policy_kind"] == "generalist":
             res = evaluate_generalist_batch(
                 padded_env_for(env, info["spec"].m_max), pcfg, params,
-                seeds, arrivals)
+                seeds, arrivals, churn=churn)
         else:
-            res = evaluate_batch(env, pcfg, params, seeds, arrivals)
+            res = evaluate_batch(env, pcfg, params, seeds, arrivals,
+                                 churn=churn)
         res["trained"] = info["trained"]
         res["policy_kind"] = info["policy_kind"]
         return res
@@ -212,10 +219,10 @@ def eval_policy(env: SchedulingEnv, name: str, *, workload: str,
             res["policy_kind"] = "heuristic"
             return res
         res = evaluate_batch_baseline(env, BL.make_magma_baseline(mcfg),
-                                      seeds, arrivals)
+                                      seeds, arrivals, churn=churn)
     else:
         res = evaluate_batch_baseline(env, BL.BASELINES[name], seeds,
-                                      arrivals)
+                                      arrivals, churn=churn)
     res["policy_kind"] = "heuristic"
     return res
 

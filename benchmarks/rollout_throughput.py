@@ -51,14 +51,12 @@ subsection: rounds/sec and periods/sec for the SAME chunk config at
 ``--xla_force_host_platform_device_count=N`` (the ``launch/dryrun.py``
 trick) — 1 device runs the plain fused chunk, N >= 2 the mesh-sharded
 ``jit``-of-``shard_map`` chunk (``core.train
-.make_sharded_train_rounds``).  Two extra arms quantify the sharding
+.make_sharded_train_rounds``).  One extra arm quantifies the sharding
 machinery itself at ONE device, where compute is identical and any
 delta is pure dispatch/collective overhead: ``shardmap_1dev`` (the
-mesh path on a 1-device mesh) and the retiring ``pmap`` reference rows
-(``core.train.make_pmap_train_rounds`` at 1 and 2 devices) —
-``overhead_1dev_shardmap`` / ``overhead_1dev_pmap`` are each arm's
-1-device rounds/sec over the plain fused row's (the CI guard tracks
-the shard_map overhead against the pmap arm's).  ``host_cores`` is
+mesh path on a 1-device mesh) — ``overhead_1dev_shardmap`` is the
+plain fused row's rounds/sec over that arm's (the pmap reference arms
+retired together with ``make_pmap_train_rounds``).  ``host_cores`` is
 recorded alongside: forced host devices *partition* the host's cores,
 so on a single-core machine the N-device arms serialize and
 ``scaling_2dev`` measures sharding overhead, not speedup — the section
@@ -112,9 +110,9 @@ from repro.core.replay import (DeviceReplay, ReplayBuffer, replay_add,
 from repro.core.rollout import (make_baseline_episode_batch,
                                 make_policy_period, make_rollout_batch,
                                 run_episode, stack_episodes)
-from repro.core.train import (make_device_mesh, make_pmap_train_rounds,
+from repro.core.train import (make_device_mesh,
                               make_sharded_train_rounds, make_train_rounds,
-                              mesh_replicate, replicate, round_keys,
+                              mesh_replicate, round_keys,
                               shard_round_keys)
 from repro.sim import engine as engine_mod
 import repro.sim.env as env_mod
@@ -365,10 +363,9 @@ def run_devices_probe(ndev: int, *, impl: str = "", rounds: int = 24,
     Runs in a CHILD process forced to ``ndev`` host devices
     (``run_train_devices`` spawns it).  ``impl`` selects the arm:
     ``fused`` (the plain single-device chunk — ``ndev`` must be 1),
-    ``shard_map`` (the mesh path, valid at any ``ndev`` including 1 —
-    the 1-device row isolates the sharding machinery's overhead), or
-    ``pmap`` (the retiring PR 6 arm, the overhead reference).  The
-    default is ``fused`` at 1 device and ``shard_map`` otherwise.
+    or ``shard_map`` (the mesh path, valid at any ``ndev`` including 1
+    — the 1-device row isolates the sharding machinery's overhead).
+    The default is ``fused`` at 1 device and ``shard_map`` otherwise.
     Same round logic and global batch/update sizes as
     :func:`run_train`'s AFTER arm (with ``batch`` raised so it splits
     over 4 devices), so the 1-device fused row doubles as that arm's
@@ -399,16 +396,10 @@ def run_devices_probe(ndev: int, *, impl: str = "", rounds: int = 24,
             jax.block_until_ready(out[3]["sla"])
     else:
         devs = jax.local_devices()[:ndev]
-        if impl == "shard_map":
-            mesh = make_device_mesh(devs)
-            rounds_fn = make_sharded_train_rounds(env, dcfg, mesh=mesh,
-                                                  **kw)
-            repl = lambda t: mesh_replicate(t, mesh)
-        else:
-            assert impl == "pmap", impl
-            rounds_fn = make_pmap_train_rounds(env, dcfg, devices=devs,
-                                               **kw)
-            repl = lambda t: replicate(t, devs)
+        assert impl == "shard_map", impl
+        mesh = make_device_mesh(devs)
+        rounds_fn = make_sharded_train_rounds(env, dcfg, mesh=mesh, **kw)
+        repl = lambda t: mesh_replicate(t, mesh)
         dkeys = shard_round_keys(keys, ndev)
         round_size = (batch // ndev) * periods
 
@@ -463,12 +454,10 @@ def run_train_devices(counts=(1, 2, 4), *, rounds: int = 24,
 
     - ``counts``: the scaling curve — the plain fused chunk at 1
       device, the mesh-sharded shard_map chunk at every N >= 2;
-    - ``shardmap_1dev`` / ``pmap``: the 1-device overhead arms (and the
-      pmap 2-device reference) — at one forced device all arms run the
-      identical compute, so ``overhead_1dev_*`` (fused rounds/sec over
-      the arm's) isolates what the sharding machinery itself costs; CI
-      guards the shard_map overhead against the pmap arm's (the
-      migration must not be slower than what it replaces);
+    - ``shardmap_1dev``: the 1-device overhead arm — at one forced
+      device it runs the identical compute as the fused row, so
+      ``overhead_1dev_shardmap`` (fused rounds/sec over the arm's)
+      isolates what the sharding machinery itself costs;
     - ``scaling_2dev``: shard_map 2-device over fused 1-device
       rounds/sec; ``host_cores`` qualifies it — forced host devices
       split the physical cores, so the ratio is a real concurrency
@@ -479,17 +468,13 @@ def run_train_devices(counts=(1, 2, 4), *, rounds: int = 24,
         impl = "fused" if n == 1 else "shard_map"
         out[str(n)] = _spawn_probe(n, impl, rounds, timeout)
     sm1 = _spawn_probe(1, "shard_map", rounds, timeout)
-    pmap_rows = {"1": _spawn_probe(1, "pmap", rounds, timeout),
-                 "2": _spawn_probe(2, "pmap", rounds, timeout)}
     fused_rps = out["1"]["rounds_per_sec"]
     cores = os.cpu_count() or 1
-    res = dict(counts=out, shardmap_1dev=sm1, pmap=pmap_rows,
+    res = dict(counts=out, shardmap_1dev=sm1,
                scaling_2dev=round(out["2"]["rounds_per_sec"]
                                   / fused_rps, 2),
                overhead_1dev_shardmap=round(
                    fused_rps / sm1["rounds_per_sec"], 2),
-               overhead_1dev_pmap=round(
-                   fused_rps / pmap_rows["1"]["rounds_per_sec"], 2),
                host_cores=cores,
                note=("forced host devices partition the physical cores; "
                      "with host_cores < N the N-device arms time-slice "
@@ -589,9 +574,9 @@ def main(argv=None):
                          "and exit (spawned by the devices scaling "
                          "subsection)")
     ap.add_argument("--probe-impl", default="",
-                    choices=("", "fused", "shard_map", "pmap"),
-                    help="arm for --devices-probe: plain fused chunk, "
-                         "mesh shard_map, or the retiring pmap reference "
+                    choices=("", "fused", "shard_map"),
+                    help="arm for --devices-probe: plain fused chunk or "
+                         "mesh shard_map "
                          "(default: fused at 1 device, shard_map above)")
     ap.add_argument("--device-counts", default="1,2,4",
                     help="device counts for the train_throughput devices "

@@ -20,15 +20,26 @@ Each row evaluates on each fleet (``fleets x fleets`` for the
 specialists) in the calibrated evaluation regime (load/QoS matching
 ``benchmarks/sweep.py``), one jitted batched eval per cell.
 
+A *churn robustness* section re-scores every learned row — plus
+one-shot heuristic reference rows (``heuristic:<name>``, evaluated on
+the unpadded per-fleet envs) — under seeded fleet-churn presets
+(``repro.sim.churn``): the question is whether the descriptor-
+conditioned generalist, which sees per-period validity/degradation in
+its conditioning, degrades more gracefully than the specialists and
+the heuristics when SAs fail or throttle mid-episode.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.transfer              # quick
   PYTHONPATH=src python -m benchmarks.transfer --full       # paper-sized
   PYTHONPATH=src python -m benchmarks.transfer --smoke      # CI (2x2)
   PYTHONPATH=src python -m benchmarks.transfer --fleets paper6,8simba
+  PYTHONPATH=src python -m benchmarks.transfer --churn fail,slowdown
 
 Output: one ``transfer,...`` CSV-ish line per cell + a fleets x fleets
-``BENCH_transfer.json`` (cells keyed ``<row>/<eval_fleet>`` — schema in
-docs/BENCHMARKS.md) for regression tracking across PRs.
+``BENCH_transfer.json`` (cells keyed ``<row>/<eval_fleet>``, churned
+cells ``<row>/<eval_fleet>/churn:<preset>``, heuristic references
+``heuristic:<name>/<eval_fleet>[...]`` — schema in docs/BENCHMARKS.md)
+for regression tracking across PRs.
 """
 from __future__ import annotations
 
@@ -40,18 +51,28 @@ import time
 
 import jax
 
-from benchmarks.common import EVAL_LOAD, EVAL_QOS_FACTOR, REPO, bench_meta
+from benchmarks.common import (EVAL_LOAD, EVAL_QOS_FACTOR, REPO, bench_meta,
+                               make_env)
 from repro.ckpt import restore_checkpoint
+from repro.core import baselines as BL
 from repro.core import policy as P
 from repro.core.generalist import (GeneralistSpec, build_padded_envs,
                                    evaluate_generalist_batch)
+from repro.core.rollout import evaluate_batch_baseline
 from repro.costmodel import get_fleet
 from repro.costmodel.fleets import fleet_names
 from repro.launch.rl_train import TrainConfig, train
 from repro.sim.arrivals import ArrivalConfig
+from repro.sim.churn import CHURN_SCENARIOS, churn_preset
 from repro.sim.env import EnvConfig
 
 DEFAULT_FLEETS = ("paper6", "8simba", "8eyeriss")
+
+# churn presets for the robustness section (hard capacity loss vs soft
+# degradation) and the one-shot reference schedulers scored alongside
+# the learned rows
+DEFAULT_CHURNS = ("fail", "throttle")
+HEURISTICS = ("fcfs", "herald")
 
 # training/eval budgets per grid size:
 # (periods, max_rq, max_jobs, hidden, episodes, batch_episodes,
@@ -96,10 +117,16 @@ def _train_row(fleets_csv: str, m_max: int, size: tuple, workload: str,
 
 
 def run(*, quick: bool = True, smoke: bool = False, workload: str = "light",
-        fleets=DEFAULT_FLEETS, out: str | None = None,
-        verbose: bool = False) -> dict:
+        fleets=DEFAULT_FLEETS, churns=DEFAULT_CHURNS,
+        out: str | None = None, verbose: bool = False) -> dict:
     size_name = "smoke" if smoke else ("quick" if quick else "full")
     size = SIZES[size_name]
+    if smoke and churns is DEFAULT_CHURNS:
+        churns = ("fail",)
+    bad = [c for c in churns if c == "none" or c not in CHURN_SCENARIOS]
+    if bad:
+        raise ValueError(f"bad churn preset(s) {bad}; choose from "
+                         f"{[c for c in CHURN_SCENARIOS if c != 'none']}")
     periods, max_rq, max_jobs, hidden, episodes, *_ = size
     n_seeds = size[7]
     m_max = max(get_fleet(f).num_sas for f in fleets)
@@ -143,31 +170,93 @@ def run(*, quick: bool = True, smoke: bool = False, workload: str = "light",
 
     cells: dict[str, dict] = {}
     for row, (params, train_fleets, _) in rows.items():
+        kind = ("generalist" if row == "generalist"
+                else ("untrained" if row == "untrained" else "specialist"))
         for f, env in eval_envs.items():
-            t0 = time.time()
-            m = evaluate_generalist_batch(env, pcfg, params, seeds)
-            cells[f"{row}/{f}"] = dict(
-                sla_rate=round(m["sla_rate"], 4),
-                energy_uj=round(m["energy_uj"], 1),
-                policy_kind="generalist" if row == "generalist"
-                else ("untrained" if row == "untrained" else "specialist"),
-                train_fleets=train_fleets,
-                wall_s=round(time.time() - t0, 2))
-            print(f"transfer,{row},{f},sla={cells[f'{row}/{f}']['sla_rate']}",
-                  flush=True)
+            for ch in ("none",) + tuple(churns):
+                ccfg = None if ch == "none" else churn_preset(ch)
+                suf = "" if ch == "none" else f"/churn:{ch}"
+                t0 = time.time()
+                m = evaluate_generalist_batch(env, pcfg, params, seeds,
+                                              churn=ccfg)
+                cells[f"{row}/{f}{suf}"] = dict(
+                    sla_rate=round(m["sla_rate"], 4),
+                    energy_uj=round(m["energy_uj"], 1),
+                    policy_kind=kind, train_fleets=train_fleets,
+                    wall_s=round(time.time() - t0, 2))
+                print(f"transfer,{row},{f},churn={ch},"
+                      f"sla={cells[f'{row}/{f}{suf}']['sla_rate']}",
+                      flush=True)
+
+    # one-shot heuristic reference rows for the robustness comparison:
+    # scored on the UNPADDED per-fleet envs (heuristics are M-agnostic
+    # by construction — no padding/descriptors involved)
+    heur_envs = {f: make_env(workload, fleet=f, periods=periods,
+                             max_rq=max_rq, max_jobs=max_jobs,
+                             load=EVAL_LOAD, qos_factor=EVAL_QOS_FACTOR)
+                 for f in fleets}
+    for h in HEURISTICS:
+        for f in fleets:
+            henv = heur_envs[f]
+            for ch in ("none",) + tuple(churns):
+                ccfg = None if ch == "none" else churn_preset(ch)
+                suf = "" if ch == "none" else f"/churn:{ch}"
+                t0 = time.time()
+                m = evaluate_batch_baseline(henv, BL.BASELINES[h], seeds,
+                                            churn=ccfg)
+                cells[f"heuristic:{h}/{f}{suf}"] = dict(
+                    sla_rate=round(m["sla_rate"], 4),
+                    energy_uj=round(m["energy_uj"], 1),
+                    policy_kind="heuristic", train_fleets=[],
+                    wall_s=round(time.time() - t0, 2))
+                print(f"transfer,heuristic:{h},{f},churn={ch},"
+                      f"sla={cells[f'heuristic:{h}/{f}{suf}']['sla_rate']}",
+                      flush=True)
 
     gen = {f: cells[f"generalist/{f}"]["sla_rate"] for f in fleets}
     unt = {f: cells[f"untrained/{f}"]["sla_rate"] for f in fleets}
     diag = [cells[f"specialist:{f}/{f}"]["sla_rate"] for f in fleets]
     off = [cells[f"specialist:{f}/{g}"]["sla_rate"]
            for f in fleets for g in fleets if f != g]
+
+    def _mean(v):
+        return round(sum(v) / len(v), 4)
+
+    # robustness: absolute churned SLA + drop-vs-static per row class
+    # (generalist vs on-diagonal specialists vs each heuristic) — the
+    # committed generalist-vs-specialist churn comparison
+    robustness: dict[str, dict] = {}
+    for ch in churns:
+        g_ch = [cells[f"generalist/{f}/churn:{ch}"]["sla_rate"]
+                for f in fleets]
+        s_ch = [cells[f"specialist:{f}/{f}/churn:{ch}"]["sla_rate"]
+                for f in fleets]
+        entry = {
+            "generalist_sla": _mean(g_ch),
+            "generalist_drop": _mean([gen[f] - v
+                                      for f, v in zip(fleets, g_ch)]),
+            "specialist_diag_sla": _mean(s_ch),
+            "specialist_diag_drop": _mean([d - v
+                                           for d, v in zip(diag, s_ch)]),
+        }
+        for h in HEURISTICS:
+            h_base = [cells[f"heuristic:{h}/{f}"]["sla_rate"]
+                      for f in fleets]
+            h_ch = [cells[f"heuristic:{h}/{f}/churn:{ch}"]["sla_rate"]
+                    for f in fleets]
+            entry[f"heuristic_{h}_sla"] = _mean(h_ch)
+            entry[f"heuristic_{h}_drop"] = _mean(
+                [b - v for b, v in zip(h_base, h_ch)])
+        entry["generalist_minus_specialist_sla"] = round(
+            entry["generalist_sla"] - entry["specialist_diag_sla"], 4)
+        robustness[ch] = entry
     summary = {
         "generalist_beats_untrained": all(gen[f] > unt[f] for f in fleets),
-        "generalist_mean_sla": round(sum(gen.values()) / len(gen), 4),
-        "untrained_mean_sla": round(sum(unt.values()) / len(unt), 4),
-        "specialist_diag_mean_sla": round(sum(diag) / len(diag), 4),
-        "specialist_offdiag_mean_sla":
-            round(sum(off) / len(off), 4) if off else None,
+        "generalist_mean_sla": _mean(list(gen.values())),
+        "untrained_mean_sla": _mean(list(unt.values())),
+        "specialist_diag_mean_sla": _mean(diag),
+        "specialist_offdiag_mean_sla": _mean(off) if off else None,
+        "churn_robustness": robustness,
         "wall_s": round(time.time() - t_all, 1),
     }
     result = dict(
@@ -175,7 +264,8 @@ def run(*, quick: bool = True, smoke: bool = False, workload: str = "light",
                   size=size_name, workload=workload, fleets=list(fleets),
                   m_max=m_max, desc_dim=spec.desc_dim, hidden=hidden,
                   episodes=episodes, periods=periods, seeds=n_seeds,
-                  load=EVAL_LOAD, qos_factor=EVAL_QOS_FACTOR),
+                  load=EVAL_LOAD, qos_factor=EVAL_QOS_FACTOR,
+                  churns=list(churns), heuristics=list(HEURISTICS)),
         cells=cells, summary=summary)
     out = out or os.path.join(REPO, "BENCH_transfer.json")
     with open(out, "w") as fh:
@@ -194,6 +284,10 @@ def main(argv=None):
     ap.add_argument("--workload", default="light")
     ap.add_argument("--fleets", default=None,
                     help=f"comma list of fleet presets {fleet_names()}")
+    ap.add_argument("--churn", default=None,
+                    help="comma list of churn presets for the robustness "
+                         f"section (default {','.join(DEFAULT_CHURNS)}; "
+                         "smoke: fail)")
     ap.add_argument("--out", default=None, help="JSON output path")
     ap.add_argument("--verbose", action="store_true",
                     help="stream per-episode training logs")
@@ -201,7 +295,10 @@ def main(argv=None):
     fleets = (tuple(args.fleets.split(",")) if args.fleets
               else (("paper6", "8simba") if args.smoke else DEFAULT_FLEETS))
     run(quick=not args.full, smoke=args.smoke, workload=args.workload,
-        fleets=fleets, out=args.out, verbose=args.verbose)
+        fleets=fleets,
+        churns=tuple(args.churn.split(",")) if args.churn
+        else DEFAULT_CHURNS,
+        out=args.out, verbose=args.verbose)
 
 
 if __name__ == "__main__":

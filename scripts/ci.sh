@@ -7,11 +7,11 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 CI_TMP="$(mktemp -d "${TMPDIR:-/tmp}/relmas_ci.XXXXXX")"
 trap 'rm -rf "$CI_TMP"' EXIT
-# pmap lint: the trainer is mesh-sharded (shard_map); new jax.pmap uses
-# must not creep back into core.  The surviving parity oracles are
-# tagged "# pmap-migration" on the jax.pmap line and exempt.
-if grep -rn "jax\.pmap" src/repro/core | grep -v "pmap-migration"; then
-  echo "ERROR: untagged jax.pmap under src/repro/core — use the mesh" \
+# pmap lint: the trainer is mesh-sharded (shard_map) and the migration
+# window closed with the PR 6 pmap oracle's removal — no jax.pmap may
+# appear under core, tagged or not.
+if grep -rn "jax\.pmap" src/repro/core; then
+  echo "ERROR: jax.pmap under src/repro/core — use the mesh" \
        "shard_map path (docs/ARCHITECTURE.md 'Mesh-sharded rounds')" >&2
   exit 1
 fi
@@ -25,11 +25,12 @@ fi
 # path end-to-end (tiny population/generations, 2 scenarios, ~15s);
 # SKIP_SWEEP=1 skips it.  Output goes to a temp dir, NOT the repo.
 if [ -z "${SKIP_SWEEP:-}" ]; then
-  python -m benchmarks.sweep --smoke --out "$CI_TMP/BENCH_sweep_smoke.json"
+  python -m benchmarks.sweep --smoke --churn none \
+    --out "$CI_TMP/BENCH_sweep_smoke.json"
   # two-fleet smoke: per-fleet re-characterization + recompile on the
   # homogeneous-dataflow extremes (fleet cells must both materialize)
   python -m benchmarks.sweep --smoke --fleets 8simba,8eyeriss \
-    --scenarios default --policies fcfs,relmas \
+    --scenarios default --policies fcfs,relmas --churn none \
     --out "$CI_TMP/BENCH_sweep_fleets_smoke.json"
   python - "$CI_TMP/BENCH_sweep_fleets_smoke.json" <<'PY'
 import json, sys
@@ -37,6 +38,25 @@ cells = json.load(open(sys.argv[1]))["cells"]
 for k in ("8simba/default/fcfs/bw16", "8eyeriss/default/fcfs/bw16"):
     assert k in cells, f"missing fleet cell {k}: {sorted(cells)}"
 print(f"fleet sweep smoke: {len(cells)} cells OK")
+PY
+  # churn-sweep smoke: the churn axis end-to-end through the batched
+  # evaluators — churned cells must materialize under their
+  # /churn:<preset> keys NEXT TO the byte-stable no-churn keys, and the
+  # per-policy robustness summary must cover the preset
+  python -m benchmarks.sweep --smoke --fleets paper6 \
+    --scenarios default,burst --policies fcfs,relmas --churn none,fail \
+    --out "$CI_TMP/BENCH_sweep_churn_smoke.json"
+  python - "$CI_TMP/BENCH_sweep_churn_smoke.json" <<'PY'
+import json, sys
+res = json.load(open(sys.argv[1]))
+cells = res["cells"]
+for sc in ("default", "burst"):
+    for p in ("fcfs", "relmas"):
+        for suf in ("", "/churn:fail"):
+            k = f"paper6/{sc}/{p}/bw16{suf}"
+            assert k in cells, f"missing churn cell {k}: {sorted(cells)}"
+assert "fail" in res["summary"]["churn_sla_drop"], res["summary"]
+print(f"churn sweep smoke: {len(cells)} cells OK")
 PY
 fi
 # fused-trainer smoke: the README quickstart's 2-round training command
@@ -59,7 +79,14 @@ if [ -z "${SKIP_TRAIN:-}" ]; then
     --batch-episodes 2 --periods 6 --max-rq 16 --max-jobs 8 --hidden 8 \
     --updates-per-episode 2 --batch-size 8 --replay-capacity 64 \
     --warmup-episodes 2 --eval-every 100 --eval-seeds 2 --devices 2 \
-    --sharded-impl shard_map --outdir "$CI_TMP/relmas_sharded_smoke"
+    --outdir "$CI_TMP/relmas_sharded_smoke"
+  # churn-trainer smoke: 2 fused rounds with a per-round drawn churn
+  # schedule (SA failure mid-episode) through the real driver
+  python -m repro.launch.rl_train --workload light --episodes 4 \
+    --batch-episodes 2 --periods 6 --max-rq 16 --max-jobs 8 --hidden 8 \
+    --updates-per-episode 2 --batch-size 8 --replay-capacity 64 \
+    --warmup-episodes 2 --eval-every 100 --eval-seeds 2 --churn fail \
+    --outdir "$CI_TMP/relmas_churn_smoke"
 fi
 # generalist smokes: (1) a 2-fleet --fleet training run (2 fused
 # fleet-sampling rounds: descriptor-conditioned policy, stacked fleet
@@ -79,11 +106,14 @@ import json, sys
 res = json.load(open(sys.argv[1]))
 cells = res["cells"]
 for row in ("generalist", "specialist:paper6", "specialist:8simba",
-            "untrained"):
+            "untrained", "heuristic:fcfs", "heuristic:herald"):
     for f in ("paper6", "8simba"):
         assert f"{row}/{f}" in cells, \
             f"missing transfer cell {row}/{f}: {sorted(cells)}"
+        assert f"{row}/{f}/churn:fail" in cells, \
+            f"missing churned transfer cell {row}/{f}: {sorted(cells)}"
 assert "generalist_beats_untrained" in res["summary"]
+assert "fail" in res["summary"]["churn_robustness"], res["summary"]
 print(f"transfer smoke: {len(cells)} cells OK")
 PY
 fi
@@ -94,11 +124,9 @@ fi
 # in the same fresh run) to regress >30%.  The devices subsection is
 # guarded the same way: its 2-device (shard_map) rounds/sec AND the
 # machine-invariant 2dev/1dev scaling ratio must both regress >30% to
-# fail (and the 1/2-device rows must be present).  The migration's
-# no-regression bar is guarded via the 1-device machinery arms:
-# shard_map's 1-device overhead must stay within 30% of the pmap arm's
-# in the same fresh run, and the shardmap_1dev rounds/sec row is
-# dual-condition guarded vs the committed file; SKIP_BENCH=1 skips
+# fail (and the 1/2-device rows must be present).  The shardmap_1dev
+# machinery arm's rounds/sec row is dual-condition guarded vs the
+# committed file; SKIP_BENCH=1 skips
 if [ -z "${SKIP_BENCH:-}" ]; then
   python -m benchmarks.rollout_throughput --only train_throughput \
     --out "$CI_TMP/BENCH_rollout_fresh.json"
@@ -120,15 +148,10 @@ for row in ("1", "2"):
         f"devices scaling section missing {row}-device row: {fd}"
 assert fd["counts"]["2"].get("impl") == "shard_map", \
     f"2-device row is not the shard_map arm: {fd['counts']['2']}"
-for arm in ("shardmap_1dev", "pmap"):
-    assert arm in fd, f"devices section missing machinery arm {arm}: {fd}"
-# machinery bar, fresh-run-internal (machine-invariant): shard_map's
-# 1-device overhead vs the fused chunk must stay within 30% of pmap's
-ov_sm, ov_pm = fd["overhead_1dev_shardmap"], fd["overhead_1dev_pmap"]
-print(f"devices machinery: overhead_1dev shard_map {ov_sm} vs pmap {ov_pm}")
-if ov_sm > ov_pm / 0.7:
-    sys.exit(f"REGRESSION: shard_map 1-device overhead {ov_sm} > 1/0.7x "
-             f"the pmap arm's {ov_pm} in the same run")
+assert "shardmap_1dev" in fd, \
+    f"devices section missing machinery arm shardmap_1dev: {fd}"
+ov_sm = fd["overhead_1dev_shardmap"]
+print(f"devices machinery: overhead_1dev shard_map {ov_sm}")
 if cd:
     new2 = fd["counts"]["2"]["rounds_per_sec"]
     old2 = cd["counts"]["2"]["rounds_per_sec"]

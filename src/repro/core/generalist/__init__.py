@@ -36,7 +36,7 @@ from repro.core.generalist.rollout import (collect_generalist,
 from repro.core.generalist.train import (
     expand_batch, generalist_replay_init, generalist_update_rounds,
     make_generalist_round, make_generalist_rounds,
-    make_pmap_generalist_rounds, make_sharded_generalist_rounds,
+    make_sharded_generalist_rounds,
     sharded_generalist_rounds_reference)
 
 __all__ = [
@@ -49,6 +49,6 @@ __all__ = [
     "restore_spec",
     "expand_batch", "generalist_replay_init", "generalist_update_rounds",
     "make_generalist_round", "make_generalist_rounds",
-    "make_pmap_generalist_rounds", "make_sharded_generalist_rounds",
+    "make_sharded_generalist_rounds",
     "sharded_generalist_rounds_reference",
 ]

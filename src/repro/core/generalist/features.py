@@ -28,7 +28,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core import policy as P
-from repro.costmodel.descriptors import DESC_DIM
+from repro.costmodel.descriptors import DESC_DIM, churn_descriptors
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,15 +92,33 @@ def generalist_act_fn(params, pcfg: P.PolicyConfig, desc, sa_mask):
     (the multi-fleet trainer gathers them per round from stacked fleet
     tensors).  ``noise`` is the pre-drawn per-period exploration block
     (the ``aux`` scan input), exactly as in the specialist path.
+
+    Under in-episode churn the env's period step injects per-period
+    ``sa_valid`` / ``lat_mult`` / ``bw_mult`` rows into the state
+    (``repro.sim.churn``), and the whole conditioning becomes
+    time-varying: the allocation/action-channel masks intersect the
+    churn validity (a failed SA drops out of ``masked_allocation``
+    mid-episode) and the descriptor block is rebuilt per period by
+    ``churn_descriptors`` (a degraded SA advertises lower effective
+    peak-MACs / bandwidth-share).  With an all-no-op row every
+    transform is the bit-exact identity; without churn the branch is
+    absent from the trace.
     """
-    chan = action_channel_mask(sa_mask)
+    chan_static = action_channel_mask(sa_mask)
 
     def act_fn(feats, mask, slots, st, key, noise):
-        a = P.actor_apply(params, pcfg, append_descriptors(feats, desc),
+        sv = st.get("sa_valid")
+        if sv is None:
+            d, m, chan = desc, sa_mask, chan_static
+        else:
+            m = sa_mask & sv
+            d = churn_descriptors(desc, sv, st["lat_mult"], st["bw_mult"])
+            chan = action_channel_mask(m)
+        a = P.actor_apply(params, pcfg, append_descriptors(feats, d),
                           mask)
         a = jnp.clip(a + noise, -1.0, 1.0) * chan
         prio = a[:, 0]
-        sa = masked_allocation(a[:, 1:], sa_mask)
+        sa = masked_allocation(a[:, 1:], m)
         return a, prio, sa
 
     return act_fn

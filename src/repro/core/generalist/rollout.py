@@ -19,24 +19,27 @@ from repro.core import policy as P
 from repro.core.generalist.env import PaddedEnv
 from repro.core.generalist.features import (GeneralistSpec,
                                             generalist_act_fn)
-from repro.core.rollout import (_runner_cache, collect_episodes,
-                                stack_episodes)
+from repro.core.rollout import (_eval_churn_schedules, _runner_cache,
+                                collect_episodes, stack_episodes)
 
 Metrics = dict[str, jnp.ndarray]
 
 
 def collect_generalist(env: PaddedEnv, pcfg: P.PolicyConfig, params,
                        states, traces, key, sigma, desc, sa_mask,
-                       collect: bool = True):
+                       collect: bool = True, churn=None):
     """Traceable generalist twin of ``rollout.collect_episodes``.
 
     ``desc`` / ``sa_mask`` may be traced (the multi-fleet round binds
     them per fleet index); exploration noise is drawn at the padded
     ``1 + M_max`` action width, padding channels masked after the
-    clip exactly like the deterministic path.
+    clip exactly like the deterministic path.  ``churn`` threads a
+    batched compiled churn schedule (``repro.sim.churn``) into each
+    episode — the act_fn reads the injected per-period validity/
+    multiplier rows for time-varying masks and descriptors.
 
     Also safe under a mapped device axis (the sharded generalist round
-    pmaps it with a per-device episode shard): every shape is padded to
+    maps it with a per-device episode shard): every shape is padded to
     ``M_max`` regardless of which fleet the round bound, so the
     per-device programs are identical even across mixed-fleet rounds —
     the collection half shards embarrassingly with no collective.
@@ -44,45 +47,66 @@ def collect_generalist(env: PaddedEnv, pcfg: P.PolicyConfig, params,
     return collect_episodes(
         env, pcfg, params, states, traces, key, sigma, collect,
         act_fn=generalist_act_fn(params, pcfg, desc, sa_mask),
-        act_dim=pcfg.act_dim)
+        act_dim=pcfg.act_dim, churn=churn)
 
 
-def make_generalist_evaluate_batch(env: PaddedEnv, pcfg: P.PolicyConfig):
+def make_generalist_evaluate_batch(env: PaddedEnv, pcfg: P.PolicyConfig,
+                                   churn: bool = False):
     """Jitted batched evaluator for a generalist on one padded env.
 
     Returns ``eval_fn(params, states, traces)`` -> metrics stacked over
     the batch axis; descriptors/mask close over the env's (concrete)
-    attributes — one compile per (env, pcfg), cached on the env.
+    attributes — one compile per (env, pcfg), cached on the env.  With
+    ``churn=True`` the runner takes a trailing batched churn schedule
+    (separately cached compile), exactly like
+    ``rollout.make_evaluate_batch``.
     """
-    key_ = ("generalist_evaluate_batch", pcfg)
+    key_ = ("generalist_evaluate_batch", pcfg, churn)
     cache = _runner_cache(env)
     if key_ in cache:
         return cache[key_]
 
     desc, sa_mask = env.descriptors, env.sa_mask
 
-    @jax.jit
-    def eval_fn(params, states, traces) -> Metrics:
-        def one(state, trace):
-            *_, metrics = env.episode(
-                state, trace,
-                generalist_act_fn(params, pcfg, desc, sa_mask),
-                collect=False)
-            return metrics
-        return jax.vmap(one)(states, traces)
+    if churn:
+        @jax.jit
+        def eval_fn(params, states, traces, churn_scheds) -> Metrics:
+            def one(state, trace, ch):
+                *_, metrics = env.episode(
+                    state, trace,
+                    generalist_act_fn(params, pcfg, desc, sa_mask),
+                    collect=False, churn=ch)
+                return metrics
+            return jax.vmap(one)(states, traces, churn_scheds)
+    else:
+        @jax.jit
+        def eval_fn(params, states, traces) -> Metrics:
+            def one(state, trace):
+                *_, metrics = env.episode(
+                    state, trace,
+                    generalist_act_fn(params, pcfg, desc, sa_mask),
+                    collect=False)
+                return metrics
+            return jax.vmap(one)(states, traces)
 
     cache[key_] = eval_fn
     return eval_fn
 
 
 def evaluate_generalist_batch(env: PaddedEnv, pcfg: P.PolicyConfig,
-                              params, seeds,
-                              arrivals=None) -> dict[str, float]:
+                              params, seeds, arrivals=None,
+                              churn=None) -> dict[str, float]:
     """Mean generalist metrics across seeds, one jitted device call —
-    the generalist twin of ``rollout.evaluate_batch``."""
+    the generalist twin of ``rollout.evaluate_batch``.  ``churn``
+    optionally threads deterministic per-seed schedules drawn over the
+    fleet's *real* SAs and compiled at ``m_max`` width."""
     traces, states = stack_episodes(env, seeds, arrivals)
-    metrics = make_generalist_evaluate_batch(env, pcfg)(params, states,
-                                                        traces)
+    if churn is None:
+        metrics = make_generalist_evaluate_batch(env, pcfg)(params, states,
+                                                            traces)
+    else:
+        metrics = make_generalist_evaluate_batch(env, pcfg, churn=True)(
+            params, states, traces, _eval_churn_schedules(env, churn, seeds))
     return {k: float(jnp.mean(v)) for k, v in metrics.items()}
 
 

@@ -35,6 +35,7 @@ from repro.core.replay import (replay_add, replay_init, replay_pair_step,
                                replay_sample, replay_sample_global)
 from repro.core.rollout import _runner_cache
 from repro.core.train import INFO_KEYS, MESH_AXIS, Mesh, _jit_shard_map
+from repro.sim.churn import churn_schedules_jax
 
 Metrics = dict[str, jnp.ndarray]
 
@@ -83,8 +84,8 @@ def generalist_update_rounds(state: D.DDPGState, dcfg: D.DDPGConfig,
     *including* the ``fleet`` column, so descriptors re-attach after
     the gather and every device expands the identical global batch —
     then runs the plain update (bit-identical replicas); ``axis_name``
-    (the retiring pmap arm) expands local samples and cross-device
-    averages gradients (see ``repro.core.ddpg.ddpg_update``)."""
+    expands local samples and cross-device averages gradients (see
+    ``repro.core.ddpg.ddpg_update``)."""
     if axis_name is not None and gather_axis is not None:
         raise ValueError("axis_name and gather_axis are mutually "
                          "exclusive replication modes")
@@ -105,25 +106,39 @@ def generalist_update_rounds(state: D.DDPGState, dcfg: D.DDPGConfig,
 def _generalist_round_body(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
                            batch_episodes: int, num_updates: int,
                            batch_size: int, sigma_min: float,
-                           sigma_decay: float, arrivals=None):
+                           sigma_decay: float, arrivals=None, churn=None):
     """Pure single-round body: sample fleet -> bind tables -> collect ->
-    ring write (+fleet column) -> gated update scan -> sigma decay."""
+    ring write (+fleet column) -> gated update scan -> sigma decay.
+
+    ``churn`` (:class:`~repro.sim.churn.ChurnConfig` or ``None``) draws
+    a fresh batched churn schedule per round over the sampled fleet's
+    *real* SAs — the traced ``sa_mask`` row keeps churn events off the
+    ``M_max`` padding columns, so the same compiled program serves every
+    fleet in the mixture."""
     template, K = envs[0], len(envs)
     stack = stack_fleet_tables(envs)
     pcfg = dcfg.policy
 
     def round_fn(state: D.DDPGState, buf: dict, key, sigma, do_update):
-        kfleet, ktrace, kroll, kup = jax.random.split(key, 4)
+        if churn is None:
+            kfleet, ktrace, kroll, kup = jax.random.split(key, 4)
+        else:
+            kfleet, ktrace, kroll, kup, kchurn = jax.random.split(key, 5)
         f = jax.random.randint(kfleet, (), 0, K)
         env_f = template.bind_tables(
             lat=stack["lat"][f], bw=stack["bw"][f], en=stack["en"][f],
             min_lat=stack["min_lat"][f],
             bandwidth_gbps=stack["bandwidth"][f])
+        scheds = None if churn is None else churn_schedules_jax(
+            churn, template.cfg.periods, template.num_sas,
+            jax.random.split(kchurn, batch_episodes),
+            sa_mask=stack["sa_mask"][f])
         traces, states = env_f.new_episodes_jax(ktrace, batch_episodes,
                                                 arrivals)
         _, trans, einfos, mets = collect_generalist(
             env_f, pcfg, state.actor, states, traces, kroll, sigma,
-            desc=stack["desc"][f], sa_mask=stack["sa_mask"][f])
+            desc=stack["desc"][f], sa_mask=stack["sa_mask"][f],
+            churn=scheds)
         flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in trans.items()}
         flat["fleet"] = jnp.full((flat["r"].shape[0],), f, jnp.int32)
         buf = replay_add(buf, flat)
@@ -157,7 +172,7 @@ def _cache_key(tag: str, dcfg, n_envs: int, kw: dict[str, Any]):
 def make_generalist_round(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
                           batch_episodes: int, num_updates: int,
                           batch_size: int, sigma_min: float,
-                          sigma_decay: float, arrivals=None):
+                          sigma_decay: float, arrivals=None, churn=None):
     """One fleet-sampling training round as ONE jitted donated call.
 
     Same contract as ``core.train.make_train_round`` (``state``/``buf``
@@ -167,7 +182,7 @@ def make_generalist_round(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals)
+              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn)
     key_ = _cache_key("generalist_round", dcfg, len(envs), kw)
     cache = _runner_cache(envs[0])
     if key_ not in cache:
@@ -179,13 +194,13 @@ def make_generalist_round(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
 def make_generalist_rounds(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
                            batch_episodes: int, num_updates: int,
                            batch_size: int, sigma_min: float,
-                           sigma_decay: float, arrivals=None):
+                           sigma_decay: float, arrivals=None, churn=None):
     """A chunk of R fleet-sampling rounds in one ``lax.scan`` dispatch —
     the generalist twin of ``core.train.make_train_rounds`` (``keys``
     (R, 2), ``do_update`` (R,), metrics stacked over rounds)."""
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals)
+              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn)
     key_ = _cache_key("generalist_rounds", dcfg, len(envs), kw)
     cache = _runner_cache(envs[0])
     if key_ in cache:
@@ -232,9 +247,9 @@ def _sharded_generalist_round_body(envs: list[PaddedEnv],
     (``shard_round_keys``); ``update_gather`` selects the update's
     sampling topology exactly as in ``core.train`` (True: all-gathered
     global minibatch, descriptors re-attached post-gather, replicas
-    bit-identical; False: local samples + pmean'd gradients — the
-    retiring pmap arm); the double-buffered ring pair carries the
-    ``fleet`` column like any other field.
+    bit-identical; False: local samples + pmean'd gradients); the
+    double-buffered ring pair carries the ``fleet`` column like any
+    other field.
     """
     template, K = envs[0], len(envs)
     stack = stack_fleet_tables(envs)
@@ -340,34 +355,6 @@ def make_sharded_generalist_rounds(envs: list[PaddedEnv],
     return cache[key_]
 
 
-def make_pmap_generalist_rounds(envs: list[PaddedEnv],
-                                dcfg: D.DDPGConfig, *, devices,
-                                batch_episodes: int, num_updates: int,
-                                batch_size: int, sigma_min: float,
-                                sigma_decay: float, arrivals=None):
-    """The retiring PR 6 pmap arm (local sampling + pmean'd gradients)
-    — same signature/layout as :func:`make_sharded_generalist_rounds`
-    with ``devices`` instead of ``mesh``.  Kept one migration-window PR
-    as the cross-implementation parity oracle (see
-    ``core.train.make_pmap_train_rounds``)."""
-    devices = tuple(devices)
-    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
-              batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals)
-    key_ = _cache_key("pmap_generalist_rounds", dcfg, len(envs), kw) \
-        + (devices,)
-    cache = _runner_cache(envs[0])
-    if key_ not in cache:
-        round_fn = _sharded_generalist_round_body(
-            envs, dcfg, num_devices=len(devices), update_gather=False,
-            **kw)
-        cache[key_] = jax.pmap(  # pmap-migration: PR 6 oracle, one-PR window
-            _sharded_generalist_scan(round_fn),
-            axis_name=MESH_AXIS, devices=devices,
-            in_axes=(0, 0, 0, None, 0, None), donate_argnums=(0, 1))
-    return cache[key_]
-
-
 def sharded_generalist_rounds_reference(envs: list[PaddedEnv],
                                         dcfg: D.DDPGConfig, *,
                                         num_devices: int,
@@ -380,8 +367,9 @@ def sharded_generalist_rounds_reference(envs: list[PaddedEnv],
     :func:`make_sharded_generalist_rounds` (same signature and (D, R)
     output layout; the ``pmean`` / ``all_gather`` collectives resolve
     identically under ``vmap(axis_name=MESH_AXIS)``).
-    ``update_gather=False`` instead mirrors the retiring
-    :func:`make_pmap_generalist_rounds` arm."""
+    ``update_gather=False`` instead exercises the local-sampling +
+    ``pmean``'d-gradient topology (the retired pmap arm's
+    behaviour)."""
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
               sigma_decay=sigma_decay, arrivals=arrivals)

@@ -23,8 +23,9 @@ round), where the outer jit's own donation applies.
 (Sec. 4.2); sequences are fixed padded length T (= 1 primer + max_rq
 sub-jobs).
 
-For the multi-device sharded trainer (``repro.core.train``'s pmap'd
-round) the ring additionally comes in a **double-buffered pair**
+For the multi-device sharded trainer (``repro.core.train``'s
+``shard_map`` round) the ring additionally comes in a
+**double-buffered pair**
 (:func:`replay_pair_init` / :func:`replay_pair_step`): each device
 holds a ``read`` ring (all transitions through round ``t-1`` — what
 round ``t``'s update scan samples) and a ``write`` ring absorbing

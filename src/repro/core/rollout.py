@@ -42,12 +42,22 @@ def _policy_act_fn(params, pcfg: P.PolicyConfig):
     """Per-period actor; ``noise`` (the per-period ``aux`` scan input)
     is the pre-drawn exploration noise — RNG inside the period scan
     costs real time on CPU, so the whole episode block is drawn in one
-    call.  The per-period ``key`` is ignored (deterministic actor)."""
+    call.  The per-period ``key`` is ignored (deterministic actor).
+
+    Under in-episode churn (``repro.sim.churn``) the env's period step
+    injects a per-period ``sa_valid`` row into the state: the SA argmax
+    masks invalid SAs to ``-inf`` so a failed (or not-yet-joined) SA is
+    never selected.  With an all-valid row the mask is the bit-exact
+    identity; without churn the branch is absent from the trace."""
     def act_fn(feats, mask, slots, st, key, noise):
         a = jnp.clip(P.actor_apply(params, pcfg, feats, mask) + noise,
                      -1.0, 1.0)
         prio = a[:, 0]
-        sa = jnp.argmax(a[:, 1:], axis=-1).astype(jnp.int32)
+        logits = a[:, 1:]
+        sv = st.get("sa_valid")
+        if sv is not None:
+            logits = jnp.where(sv, logits, -jnp.inf)
+        sa = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return a, prio, sa
     return act_fn
 
@@ -62,7 +72,7 @@ def _runner_cache(env: SchedulingEnv) -> dict:
 
 def collect_episodes(env: SchedulingEnv, pcfg: P.PolicyConfig, params,
                      states, traces, key, sigma, collect: bool = True,
-                     act_fn=None, act_dim: int | None = None):
+                     act_fn=None, act_dim: int | None = None, churn=None):
     """Traceable batched policy collection: draw the whole batch's
     exploration-noise block from ``key`` and run every episode through
     ``env.episode`` under ``vmap``.  The single definition of the
@@ -71,19 +81,23 @@ def collect_episodes(env: SchedulingEnv, pcfg: P.PolicyConfig, params,
     (``repro.core.train``), and — via ``act_fn``/``act_dim`` overrides —
     the descriptor-conditioned generalist policy
     (``repro.core.generalist``), whose action space is ``1 + M_max``
-    rather than the env's ``1 + M``.  Returns the vmapped episode
-    outputs ``(final_states, transitions, infos, metrics)``."""
+    rather than the env's ``1 + M``.  ``churn`` optionally threads a
+    batched compiled churn schedule (``(batch, periods, M)`` leaves,
+    see ``repro.sim.churn``) into each episode.  Returns the vmapped
+    episode outputs ``(final_states, transitions, infos, metrics)``."""
     batch = states["t"].shape[0]
     noise = sigma * jax.random.normal(
         key, (batch, env.cfg.periods, env.cfg.max_rq,
               act_dim or env.act_dim))
     act_fn = act_fn or _policy_act_fn(params, pcfg)
 
-    def one(state, trace, ep_noise):
+    def one(state, trace, ep_noise, ch=None):
         return env.episode(state, trace, act_fn,
-                           aux=ep_noise, collect=collect)
+                           aux=ep_noise, collect=collect, churn=ch)
 
-    return jax.vmap(one)(states, traces, noise)
+    if churn is None:
+        return jax.vmap(one)(states, traces, noise)
+    return jax.vmap(one)(states, traces, noise, churn)
 
 
 def make_rollout_batch(env: SchedulingEnv, pcfg: P.PolicyConfig,
@@ -142,31 +156,47 @@ def make_rollout_batch(env: SchedulingEnv, pcfg: P.PolicyConfig,
     return rollout_batch
 
 
-def make_evaluate_batch(env: SchedulingEnv, pcfg: P.PolicyConfig):
+def make_evaluate_batch(env: SchedulingEnv, pcfg: P.PolicyConfig,
+                        churn: bool = False):
     """Jitted batched evaluator (no noise, no transition collection).
 
     Returns ``eval_fn(params, states, traces)`` -> metrics stacked over
-    the batch axis.
+    the batch axis.  With ``churn=True`` the runner takes an extra
+    trailing argument — a batched compiled churn schedule
+    (``(batch, periods, M)`` leaves) — and is cached separately: the
+    churn-enabled program scans extra ``xs``, so the two variants are
+    distinct compiles.
     """
-    key_ = ("evaluate_batch", pcfg)
+    key_ = ("evaluate_batch", pcfg, churn)
     cache = _runner_cache(env)
     if key_ in cache:
         return cache[key_]
 
-    @jax.jit
-    def eval_fn(params, states, traces) -> Metrics:
-        def one(state, trace):
-            *_, metrics = env.episode(
-                state, trace, _policy_act_fn(params, pcfg),
-                collect=False)
-            return metrics
-        return jax.vmap(one)(states, traces)
+    if churn:
+        @jax.jit
+        def eval_fn(params, states, traces, churn_scheds) -> Metrics:
+            def one(state, trace, ch):
+                *_, metrics = env.episode(
+                    state, trace, _policy_act_fn(params, pcfg),
+                    collect=False, churn=ch)
+                return metrics
+            return jax.vmap(one)(states, traces, churn_scheds)
+    else:
+        @jax.jit
+        def eval_fn(params, states, traces) -> Metrics:
+            def one(state, trace):
+                *_, metrics = env.episode(
+                    state, trace, _policy_act_fn(params, pcfg),
+                    collect=False)
+                return metrics
+            return jax.vmap(one)(states, traces)
 
     cache[key_] = eval_fn
     return eval_fn
 
 
-def make_baseline_episode_batch(env: SchedulingEnv, baseline_fn: Callable):
+def make_baseline_episode_batch(env: SchedulingEnv, baseline_fn: Callable,
+                                churn: bool = False):
     """Jitted batched episode runner for a baseline scheduler.
 
     ``baseline_fn(slots, state, env, key)`` — the one-shot heuristics
@@ -180,29 +210,49 @@ def make_baseline_episode_batch(env: SchedulingEnv, baseline_fn: Callable):
     correlated with the traces those same seeds generated — the old
     fallback folded ``PRNGKey(0)`` by batch *index*, silently
     decorrelating the GA's randomness from the episode seeds.
+
+    With ``churn=True`` the runner takes a batched compiled churn
+    schedule via the ``churn_scheds`` keyword (cached as a separate
+    compile).  The heuristics need no masking of their own: an invalid
+    SA advertises the saturated poison cost, which their greedy
+    score-argmin avoids whenever any valid SA can take the slot.
     """
-    key_ = ("baseline_batch", baseline_fn)
+    key_ = ("baseline_batch", baseline_fn, churn)
     cache = _runner_cache(env)
     if key_ in cache:
         return cache[key_]
 
-    @jax.jit
-    def _eval(states, traces, keys) -> Metrics:
-        def one(state, trace, key):
-            def act_fn(feats, mask, slots, st, k, aux):
-                return baseline_fn(slots, st, env, k)
-            *_, metrics = env.episode(state, trace, act_fn, key=key,
-                                      collect=False)
-            return metrics
-        return jax.vmap(one)(states, traces, keys)
+    if churn:
+        @jax.jit
+        def _eval(states, traces, keys, churn_scheds) -> Metrics:
+            def one(state, trace, key, ch):
+                def act_fn(feats, mask, slots, st, k, aux):
+                    return baseline_fn(slots, st, env, k)
+                *_, metrics = env.episode(state, trace, act_fn, key=key,
+                                          collect=False, churn=ch)
+                return metrics
+            return jax.vmap(one)(states, traces, keys, churn_scheds)
+    else:
+        @jax.jit
+        def _eval(states, traces, keys) -> Metrics:
+            def one(state, trace, key):
+                def act_fn(feats, mask, slots, st, k, aux):
+                    return baseline_fn(slots, st, env, k)
+                *_, metrics = env.episode(state, trace, act_fn, key=key,
+                                          collect=False)
+                return metrics
+            return jax.vmap(one)(states, traces, keys)
 
-    def eval_fn(states, traces, keys=None, *, seeds=None) -> Metrics:
+    def eval_fn(states, traces, keys=None, *, seeds=None,
+                churn_scheds=None) -> Metrics:
         if keys is None:
             if seeds is None:
                 raise ValueError(
                     "pass per-episode PRNG `keys`, or the episode "
                     "`seeds` the traces were generated from")
             keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+        if churn:
+            return _eval(states, traces, keys, churn_scheds)
         return _eval(states, traces, keys)
 
     cache[key_] = eval_fn
@@ -223,25 +273,55 @@ def stack_episodes(env: SchedulingEnv, seeds, arrivals=None):
     return traces, states
 
 
+def _eval_churn_schedules(env: SchedulingEnv, churn, seeds):
+    """Deterministic per-seed eval schedules (``repro.sim.churn``).
+
+    Drawn over the env's *real* SA count (``true_num_sas`` on a padded
+    env) and compiled at its table width, so padded and unpadded rows
+    of the same fleet see identical real-SA events per seed.
+    """
+    from repro.sim.churn import churn_schedules
+    real = getattr(env, "true_num_sas", env.num_sas)
+    return churn_schedules(churn, env.cfg.periods, real, seeds,
+                           width=env.num_sas)
+
+
 def evaluate_batch(env: SchedulingEnv, pcfg: P.PolicyConfig, params,
-                   seeds, arrivals=None) -> dict[str, float]:
-    """Mean policy metrics across seeds, one jitted device call."""
+                   seeds, arrivals=None, churn=None) -> dict[str, float]:
+    """Mean policy metrics across seeds, one jitted device call.
+
+    ``churn`` optionally names a :class:`~repro.sim.churn.ChurnConfig`:
+    each seed gets a deterministic compiled schedule (decorrelated from
+    its arrival trace) threaded through the churn-enabled evaluator.
+    """
     traces, states = stack_episodes(env, seeds, arrivals)
-    metrics = make_evaluate_batch(env, pcfg)(params, states, traces)
+    if churn is None:
+        metrics = make_evaluate_batch(env, pcfg)(params, states, traces)
+    else:
+        metrics = make_evaluate_batch(env, pcfg, churn=True)(
+            params, states, traces, _eval_churn_schedules(env, churn, seeds))
     return {k: float(jnp.mean(v)) for k, v in metrics.items()}
 
 
 def evaluate_batch_baseline(env: SchedulingEnv, baseline_fn: Callable,
-                            seeds, arrivals=None) -> dict[str, float]:
+                            seeds, arrivals=None,
+                            churn=None) -> dict[str, float]:
     """Mean baseline metrics across seeds, one jitted call.
 
     Works for the one-shot heuristics and for scan-fused MAGMA alike:
     each episode gets ``PRNGKey(seed)``, split per period in-trace.
+    ``churn`` threads per-seed schedules exactly like
+    :func:`evaluate_batch`.
     """
     traces, states = stack_episodes(env, seeds, arrivals)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    metrics = make_baseline_episode_batch(env, baseline_fn)(states, traces,
-                                                            keys)
+    if churn is None:
+        metrics = make_baseline_episode_batch(env, baseline_fn)(
+            states, traces, keys)
+    else:
+        metrics = make_baseline_episode_batch(env, baseline_fn, churn=True)(
+            states, traces, keys,
+            churn_scheds=_eval_churn_schedules(env, churn, seeds))
     return {k: float(jnp.mean(v)) for k, v in metrics.items()}
 
 

@@ -47,11 +47,17 @@ round for sigma decay + logging.  This module removes all of it:
   plain :func:`make_train_rounds` path, which stays the numerical
   parity oracle.  :func:`sharded_rounds_reference` is the same
   per-device body under ``vmap`` (same ``axis_name`` collectives) —
-  the single-device oracle; :func:`make_pmap_train_rounds` is the
-  retiring PR 6 ``pmap`` arm (local sampling + ``pmean``'d grads),
-  kept ONE migration-window PR as the cross-implementation parity
-  oracle, equal to the mesh path up to float reassociation on the same
-  sample keys.
+  the single-device oracle.  (The PR 6 ``pmap`` arm served one
+  migration-window release as the cross-implementation parity oracle
+  and has been retired; the pmap CI lint in ``scripts/ci.sh`` now
+  holds unconditionally.)
+
+Every round maker accepts an optional ``churn``
+(:class:`~repro.sim.churn.ChurnConfig`): the round splits one extra
+key and draws a fresh batched churn schedule on device
+(``churn_schedules_jax``) for its episode batch, so the policy trains
+under fleet faults / throttles / joins exactly as it is evaluated.
+``None`` (default) leaves the static-fleet program byte-identical.
 
 Donation contract: the ``state`` and ``buf`` arguments of the returned
 callables are consumed — always rebind to the returned values (the
@@ -73,6 +79,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.core import ddpg as D
 from repro.core.replay import replay_add, replay_pair_step
 from repro.core.rollout import _runner_cache, collect_episodes
+from repro.sim.churn import churn_schedules_jax
 from repro.sim.env import SchedulingEnv
 
 Metrics = dict[str, jnp.ndarray]
@@ -105,16 +112,30 @@ def shard_round_keys(keys: jnp.ndarray, num_devices: int) -> jnp.ndarray:
 
 def _round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                 batch_episodes: int, num_updates: int, batch_size: int,
-                sigma_min: float, sigma_decay: float, arrivals=None):
-    """Pure single-round body shared by the jitted round and the scan."""
+                sigma_min: float, sigma_decay: float, arrivals=None,
+                churn=None):
+    """Pure single-round body shared by the jitted round and the scan.
+
+    ``churn`` (a :class:`~repro.sim.churn.ChurnConfig`, or ``None`` for
+    a static fleet) splits one extra key per round and draws a fresh
+    batched churn schedule on device — each episode of the batch trains
+    against its own fault/throttle/join trace."""
     pcfg = dcfg.policy
 
     def round_fn(state: D.DDPGState, buf: dict, key, sigma, do_update):
-        ktrace, kroll, kup = jax.random.split(key, 3)
+        if churn is None:
+            ktrace, kroll, kup = jax.random.split(key, 3)
+            scheds = None
+        else:
+            ktrace, kroll, kup, kchurn = jax.random.split(key, 4)
+            scheds = churn_schedules_jax(
+                churn, env.cfg.periods, env.num_sas,
+                jax.random.split(kchurn, batch_episodes))
         traces, states = env.new_episodes_jax(ktrace, batch_episodes,
                                               arrivals)
         _, trans, einfos, mets = collect_episodes(
-            env, pcfg, state.actor, states, traces, kroll, sigma)
+            env, pcfg, state.actor, states, traces, kroll, sigma,
+            churn=scheds)
         # (episodes, periods, ...) -> (episodes * periods, ...) ring write
         flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in trans.items()}
         buf = replay_add(buf, flat)
@@ -145,7 +166,8 @@ def _cache_key(tag: str, dcfg, kw: dict[str, Any]):
 
 def make_train_round(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                      batch_episodes: int, num_updates: int, batch_size: int,
-                     sigma_min: float, sigma_decay: float, arrivals=None):
+                     sigma_min: float, sigma_decay: float, arrivals=None,
+                     churn=None):
     """One full training round as ONE jitted, donated device call.
 
     Returns ``round_fn(state, buf, key, sigma, do_update)`` ->
@@ -158,7 +180,7 @@ def make_train_round(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals)
+              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn)
     key_ = _cache_key("train_round", dcfg, kw)
     cache = _runner_cache(env)
     if key_ not in cache:
@@ -170,7 +192,7 @@ def make_train_round(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
 def make_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                       batch_episodes: int, num_updates: int,
                       batch_size: int, sigma_min: float,
-                      sigma_decay: float, arrivals=None):
+                      sigma_decay: float, arrivals=None, churn=None):
     """A chunk of R rounds fused into one ``lax.scan`` dispatch.
 
     Returns ``rounds_fn(state, buf, keys, sigma, do_update)`` ->
@@ -187,7 +209,7 @@ def make_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals)
+              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn)
     key_ = _cache_key("train_rounds", dcfg, kw)
     cache = _runner_cache(env)
     if key_ in cache:
@@ -449,38 +471,6 @@ def make_sharded_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
     return cache[key_]
 
 
-def make_pmap_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
-                           devices, batch_episodes: int,
-                           num_updates: int, batch_size: int,
-                           sigma_min: float, sigma_decay: float,
-                           arrivals=None):
-    """The retiring PR 6 pmap arm: local update sampling + ``pmean``'d
-    gradients (``update_gather=False``), same signature and (D, ...)
-    layout as :func:`make_sharded_train_rounds` with :func:`replicate`
-    instead of :func:`mesh_replicate`.
-
-    Kept ONE migration-window PR as the cross-implementation parity
-    oracle for the mesh path (equal to it up to float reassociation on
-    the same sample keys — ``tests/test_train_sharded.py``) and as the
-    bench's overhead reference arm; scheduled for removal together
-    with the ``pmap-migration`` CI-lint allowance in ``scripts/ci.sh``.
-    """
-    devices = tuple(devices)
-    kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
-              batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals)
-    key_ = _cache_key("pmap_rounds", dcfg, kw) + (devices,)
-    cache = _runner_cache(env)
-    if key_ not in cache:
-        round_fn = _sharded_round_body(env, dcfg,
-                                       num_devices=len(devices),
-                                       update_gather=False, **kw)
-        cache[key_] = jax.pmap(  # pmap-migration: PR 6 oracle, one-PR window
-            _sharded_scan(round_fn), axis_name=MESH_AXIS, devices=devices,
-            in_axes=(0, 0, 0, 0, None), donate_argnums=(0, 1))
-    return cache[key_]
-
-
 def sharded_rounds_reference(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                              num_devices: int, batch_episodes: int,
                              num_updates: int, batch_size: int,
@@ -494,8 +484,9 @@ def sharded_rounds_reference(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
     inputs the results must agree up to XLA fusion-level float
     differences regardless of how many physical devices exist.  Same
     signature and (D, R) output layout as the mesh callable; runs on
-    the default device.  ``update_gather=False`` instead mirrors the
-    retiring :func:`make_pmap_train_rounds` arm.
+    the default device.  ``update_gather=False`` instead exercises the
+    local-sampling + ``pmean``'d-gradient topology (the behaviour of
+    the retired pmap arm).
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import math
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.costmodel.accelerators import FREQ_GHZ, MASConfig, SAClass
@@ -87,4 +88,34 @@ def fleet_descriptors(mas: MASConfig, m_max: int | None = None) -> np.ndarray:
     out = np.zeros((m_max, DESC_DIM), dtype=np.float32)
     for i, sa in enumerate(mas.sas):
         out[i] = sa_descriptor(sa, mas)
+    return out
+
+
+_PEAK_MACS_IDX = DESC_FIELDS.index("peak_macs")
+_BW_SHARE_IDX = DESC_FIELDS.index("bw_share")
+
+
+def churn_descriptors(desc, valid, lat_mult, bw_mult):
+    """Time-varying descriptor rows under in-episode churn (traceable).
+
+    ``desc`` is the static ``(M, DESC_DIM)`` fleet table; ``valid`` /
+    ``lat_mult`` / ``bw_mult`` are one period's ``(M,)`` churn row
+    (``repro.sim.churn``).  An invalid (failed / not-yet-joined) SA's
+    row zeroes out — indistinguishable from an ``M_max`` padding slot,
+    which is exactly how the M-agnostic policy should read a machine
+    that cannot take work.  A slowed SA's effective throughput drops on
+    the log-scaled ``peak_macs`` field by ``log2(lat_mult)``; a
+    throttled SA's ``bw_share`` drops by ``log2(bw_mult)``.
+
+    All-true validity with unit multipliers is the bit-exact identity
+    (``x * 1.0`` and ``x + (-0.0)`` preserve every IEEE bit) — the
+    zero-churn parity contract of ``tests/test_churn.py``.
+    """
+    desc = jnp.asarray(desc)
+    v = valid.astype(desc.dtype)
+    out = desc * v[:, None]
+    out = out.at[:, _PEAK_MACS_IDX].add(
+        -v * jnp.log2(lat_mult).astype(desc.dtype) / _LOG2_MACS_REF)
+    out = out.at[:, _BW_SHARE_IDX].add(
+        -v * jnp.log2(bw_mult).astype(desc.dtype) / _LOG2_BW_REF)
     return out

@@ -42,9 +42,13 @@ Knobs:
   single-device arrays, so a run may restore at any ``--devices``.
   ``--devices 1`` (default) is the plain fused path and the numerical
   parity oracle (``tests/test_train_sharded.py``);
-- ``--sharded-impl IMPL`` ``shard_map`` (default) | ``pmap`` — the
-  retiring PR 6 pmap arm (local update samples + pmean'd gradients),
-  kept one migration-window PR as a cross-implementation oracle;
+- ``--churn NAME``        fleet-churn preset (``none``, ``fail``,
+  ``throttle``, ``slowdown``, ``join``, ``mixed`` — see
+  ``repro.sim.churn``): each fused round draws a fresh per-episode
+  churn schedule on device, so the policy trains against SA failures /
+  degradations / elastic joins exactly as the churn benchmarks evaluate
+  it.  ``none`` (default) keeps the static-fleet program; churn is a
+  single-device feature (``--devices 1``);
 - ``--scenario NAME``     arrival-process preset (``default``,
   ``steady``, ``burst``, ``diurnal``, ``heavy_tail`` — see
   ``repro.sim.arrivals``; the fused round draws traces on device via
@@ -89,17 +93,16 @@ from repro.core.generalist import (GeneralistSpec, build_padded_envs,
                                    generalist_replay_init,
                                    make_generalist_round,
                                    make_generalist_rounds,
-                                   make_pmap_generalist_rounds,
                                    make_sharded_generalist_rounds)
 from repro.core.replay import replay_init, replay_pair_init
 from repro.core.rollout import evaluate_batch, evaluate_batch_baseline
 from repro.core.train import (INFO_KEYS, make_device_mesh,
-                              make_pmap_train_rounds,
                               make_sharded_train_rounds,
                               make_train_round, make_train_rounds,
-                              mesh_replicate, replicate, round_keys,
+                              mesh_replicate, round_keys,
                               shard_round_keys, unreplicate)
 from repro.sim.arrivals import ArrivalConfig
+from repro.sim.churn import CHURN_SCENARIOS, churn_preset
 from repro.sim.env import EnvConfig, SchedulingEnv
 from repro.workloads import build_registry
 
@@ -132,9 +135,9 @@ class TrainConfig:
     # shard each fused round over this many local devices (1 = the
     # single-device fused path, the numerical parity oracle)
     devices: int = 1
-    # shard_map (jit-of-shard_map on an explicit mesh, all-gathered
-    # global update minibatches) | pmap (retiring PR 6 arm)
-    sharded_impl: str = "shard_map"
+    # in-episode fleet-churn preset drawn fresh per fused round
+    # (repro.sim.churn); "none" keeps the static-fleet program
+    churn: str = "none"
     updates_per_episode: int = 30
     batch_size: int = 32
     replay_capacity: int = 4000
@@ -253,9 +256,14 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
             f"fit --replay-capacity ({cfg.replay_capacity})")
     if cfg.devices < 1:
         raise ValueError(f"--devices must be >= 1, got {cfg.devices}")
-    if cfg.sharded_impl not in ("shard_map", "pmap"):
-        raise ValueError(f"--sharded-impl must be shard_map|pmap, "
-                         f"got {cfg.sharded_impl!r}")
+    if cfg.churn not in CHURN_SCENARIOS:
+        raise ValueError(f"--churn must be one of "
+                         f"{'|'.join(CHURN_SCENARIOS)}, got {cfg.churn!r}")
+    churn_cfg = None if cfg.churn == "none" else churn_preset(cfg.churn)
+    if churn_cfg is not None and cfg.devices > 1:
+        raise ValueError("--churn is a single-device feature: the "
+                         "sharded round bodies do not thread churn "
+                         "schedules; use --devices 1")
     if cfg.devices > 1:
         # fail fast with actionable messages, not inside shard_map tracing
         ndev = jax.local_device_count()
@@ -360,13 +368,10 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
 
     sharded = cfg.devices > 1
     devs = jax.local_devices()[:cfg.devices]
-    use_mesh = cfg.sharded_impl == "shard_map"
-    mesh = make_device_mesh(devs) if sharded and use_mesh else None
-    # replication layout follows the sharded impl: mesh_replicate lays
-    # the leading D axis out over the mesh axis so shard_map moves no
-    # data; replicate targets the pmap arm's per-device buffers
-    repl = ((lambda t: mesh_replicate(t, mesh)) if use_mesh
-            else (lambda t: replicate(t, devs)))
+    mesh = make_device_mesh(devs) if sharded else None
+    # mesh_replicate lays the leading D axis out over the mesh axis so
+    # shard_map moves no data
+    repl = lambda t: mesh_replicate(t, mesh)
     if not sharded and len(jax.local_devices()) > 1:
         # --devices N shards the fused round over N local devices
         # (collection splits, the update consumes all-gathered global
@@ -396,18 +401,19 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                             cfg.sigma0 * cfg.sigma_decay ** start_ep))
 
     def trainer_kw(n: int) -> dict:
-        return dict(batch_episodes=n,
-                    num_updates=cfg.updates_per_episode * n,
-                    batch_size=cfg.batch_size, sigma_min=cfg.sigma_min,
-                    sigma_decay=cfg.sigma_decay)
+        kw = dict(batch_episodes=n,
+                  num_updates=cfg.updates_per_episode * n,
+                  batch_size=cfg.batch_size, sigma_min=cfg.sigma_min,
+                  sigma_decay=cfg.sigma_decay)
+        if churn_cfg is not None:   # single-device only (validated above)
+            kw["churn"] = churn_cfg
+        return kw
 
     if kind == "generalist":
         make_round = lambda **kw: make_generalist_round(envs, dcfg, **kw)
         make_rounds = lambda **kw: make_generalist_rounds(envs, dcfg, **kw)
-        make_sharded = ((lambda **kw: make_sharded_generalist_rounds(
-            envs, dcfg, mesh=mesh, **kw)) if use_mesh else
-            (lambda **kw: make_pmap_generalist_rounds(
-                envs, dcfg, devices=devs, **kw)))
+        make_sharded = lambda **kw: make_sharded_generalist_rounds(
+            envs, dcfg, mesh=mesh, **kw)
 
         def eval_policy_fn(params, seeds):
             """Mean metrics across every training fleet (+ per-fleet)."""
@@ -421,10 +427,8 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
     else:
         make_round = lambda **kw: make_train_round(env, dcfg, **kw)
         make_rounds = lambda **kw: make_train_rounds(env, dcfg, **kw)
-        make_sharded = ((lambda **kw: make_sharded_train_rounds(
-            env, dcfg, mesh=mesh, **kw)) if use_mesh else
-            (lambda **kw: make_pmap_train_rounds(
-                env, dcfg, devices=devs, **kw)))
+        make_sharded = lambda **kw: make_sharded_train_rounds(
+            env, dcfg, mesh=mesh, **kw)
         eval_policy_fn = lambda params, seeds: evaluate_batch(
             env, pcfg, params, seeds)
 
@@ -437,7 +441,7 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
 
     ckpt_meta = dict(fleet=cfg.fleet, policy_kind=kind,
                      hidden=cfg.hidden, feat_dim=pcfg.feat_dim,
-                     act_dim=pcfg.act_dim)
+                     act_dim=pcfg.act_dim, churn=cfg.churn)
     if spec is not None:
         ckpt_meta.update(m_max=spec.m_max, desc_dim=spec.desc_dim,
                          fleets=fleets)
@@ -452,9 +456,9 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         t0 = time.time()
         if sharded:
             # chunk sharded over the device axis: ONE jitted shard_map
-            # (or retiring pmap) dispatch; keys fold in the device
-            # index, the generalist's fleet draw uses the shared
-            # (replicated, un-sharded) round keys
+            # dispatch; keys fold in the device index, the generalist's
+            # fleet draw uses the shared (replicated, un-sharded)
+            # round keys
             rounds_fn = make_sharded(**trainer_kw(n))
             dkeys = shard_round_keys(keys, cfg.devices)
             args = ((state, buf, dkeys, keys, sigma, jnp.asarray(flags))
@@ -558,9 +562,9 @@ _HELP = {
                "batch-episodes/batch-size/replay-capacity divisible by N "
                "and N <= jax.local_device_count(); 1 = single-device "
                "fused path (parity oracle)",
-    "sharded_impl": "shard_map (default) | pmap (retiring PR 6 arm: local "
-                    "update samples + pmean'd gradients; one "
-                    "migration-window PR)",
+    "churn": "in-episode fleet-churn preset drawn fresh per fused round: "
+             "none | fail | throttle | slowdown | join | mixed "
+             "(sim.churn); single-device only",
     "eval_baselines": 'comma list scored on the eval seeds before '
                       'training, e.g. "fcfs,herald,magma" ("" = skip)',
     "fail_at": "inject a crash at this episode (fault-tolerance tests)",

@@ -10,10 +10,31 @@ fallbacks in ``sharding.logical_spec`` make any mesh size legal.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.ckpt import restore_checkpoint
 from repro.models import partition as PT
 from repro.models import sharding as shd
+
+
+def join_schedule(rng: np.random.Generator, *, periods: int,
+                  num_sas: int, n: int = 1,
+                  window: tuple[float, float] = (0.25, 0.75)
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Draw ``n`` elastic-join events: (period, sa) int32 arrays.
+
+    The scheduling twin of :func:`reshard_restore`: capacity appears
+    mid-run.  A join target is *absent* (invalid) from period 0 until
+    its event period, then flips valid — ``repro.sim.churn`` compiles
+    the rows into per-period validity masks.  Distinct SAs, uniform
+    periods inside ``window``.
+    """
+    n = max(0, min(int(n), num_sas))
+    lo = int(window[0] * periods)
+    hi = max(lo + 1, int(window[1] * periods))
+    p = rng.integers(lo, hi, size=n)
+    sa = rng.choice(num_sas, size=n, replace=False)
+    return p.astype(np.int32), sa.astype(np.int32)
 
 
 def device_put_like(tree, mesh, rules, *, kind: str = "param"):

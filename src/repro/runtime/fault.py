@@ -24,6 +24,27 @@ class SimulatedFailure(RuntimeError):
     """Stand-in for a node crash / preemption."""
 
 
+def failure_schedule(rng: np.random.Generator, *, periods: int,
+                     num_sas: int, n: int = 1,
+                     window: tuple[float, float] = (0.25, 0.75)
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Draw ``n`` fail-stop events for the in-episode churn schedule.
+
+    Returns ``(period, sa)`` int32 arrays: each event marks one SA as
+    failed from that period onward (``repro.sim.churn`` compiles the
+    rows into per-period validity masks).  Events land uniformly inside
+    ``window`` (fractions of the episode) and target *distinct* SAs;
+    ``n`` is clamped to ``num_sas - 1`` so at least one SA survives —
+    a fleet with zero valid SAs has no meaningful schedule.
+    """
+    n = max(0, min(int(n), num_sas - 1))
+    lo = int(window[0] * periods)
+    hi = max(lo + 1, int(window[1] * periods))
+    p = rng.integers(lo, hi, size=n)
+    sa = rng.choice(num_sas, size=n, replace=False)
+    return p.astype(np.int32), sa.astype(np.int32)
+
+
 @dataclasses.dataclass
 class FailureInjector:
     """Raises at fixed steps (deterministic tests) or with prob/step."""

@@ -20,7 +20,56 @@ import dataclasses
 import time
 from typing import Callable, Iterable, TypeVar
 
+import numpy as np
+
 T = TypeVar("T")
+
+
+def _degradation_schedule(rng: np.random.Generator, *, periods: int,
+                          num_sas: int, n: int,
+                          window: tuple[float, float], magnitude: float
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Shared draw for slowdown/throttle events: (period, sa, mag)."""
+    n = max(0, min(int(n), num_sas))
+    lo = int(window[0] * periods)
+    hi = max(lo + 1, int(window[1] * periods))
+    p = rng.integers(lo, hi, size=n)
+    sa = rng.choice(num_sas, size=n, replace=False)
+    mag = np.full(n, magnitude, np.float32)
+    return p.astype(np.int32), sa.astype(np.int32), mag
+
+
+def slowdown_schedule(rng: np.random.Generator, *, periods: int,
+                      num_sas: int, n: int = 1,
+                      window: tuple[float, float] = (0.25, 0.75),
+                      magnitude: float = 4.0
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Draw ``n`` compute-straggler events: (period, sa, lat_mult).
+
+    From each event's period onward the target SA executes every layer
+    ``magnitude``x slower (its advertised busy-times scale with it —
+    the traced twin of this module's "slow SAs advertise longer busy
+    times" mechanism, but mid-episode).  Distinct SAs, uniform periods
+    inside ``window``.
+    """
+    return _degradation_schedule(rng, periods=periods, num_sas=num_sas,
+                                 n=n, window=window, magnitude=magnitude)
+
+
+def throttle_schedule(rng: np.random.Generator, *, periods: int,
+                      num_sas: int, n: int = 1,
+                      window: tuple[float, float] = (0.25, 0.75),
+                      magnitude: float = 4.0
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Draw ``n`` memory-path throttle events: (period, sa, bw_mult).
+
+    A throttled SA's DRAM link degrades: its sub-jobs demand
+    ``magnitude``x the bus bandwidth per unit of work (MoCA-style
+    contention pressure), so overlapping SJs fleet-wide see more stall
+    cycles.  Same draw scheme as :func:`slowdown_schedule`.
+    """
+    return _degradation_schedule(rng, periods=periods, num_sas=num_sas,
+                                 n=n, window=window, magnitude=magnitude)
 
 
 @dataclasses.dataclass

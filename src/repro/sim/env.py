@@ -43,6 +43,18 @@ State = dict[str, Any]
 Trace = dict[str, Any]
 Slots = dict[str, Any]
 
+# advertised cost of an SA that is invalid this period (failed, or not
+# yet joined — see repro.sim.churn): large enough that selecting it is
+# an unmissable SLA catastrophe, finite so the `* zero` slot masking in
+# build_slots stays NaN-free (INF * 0 = NaN).  Mirrors the padding
+# poison PAD_LAT_US of repro.core.generalist.env.
+CHURN_POISON_US = 1.0e7
+
+# state keys injected by `period` when a churn row is threaded; they are
+# visible to build_slots / act_fns and stripped before the state is
+# returned (the scan carry keeps its static structure)
+_CHURN_KEYS = ("sa_valid", "lat_mult", "bw_mult")
+
 
 @dataclasses.dataclass(frozen=True)
 class EnvConfig:
@@ -209,6 +221,22 @@ class SchedulingEnv:
         cost_all = self.lat[model, layer]              # (R, M)
         bw_all = self.bw[model, layer]
         en_all = self.en[model, layer]
+        # in-episode churn (rows injected by `period` when a schedule is
+        # threaded — repro.sim.churn): a slowed SA advertises scaled
+        # busy-times, a throttled SA scaled bus demand, an invalid SA a
+        # saturated poison cost.  All three are bit-exact identities at
+        # the no-op row (x * 1.0 / where(True, x, _)), so the zero-churn
+        # program reproduces the static path bit-for-bit.
+        lat_mult = state.get("lat_mult")
+        if lat_mult is not None:
+            cost_all = cost_all * lat_mult[None, :]
+        bw_mult = state.get("bw_mult")
+        if bw_mult is not None:
+            bw_all = bw_all * bw_mult[None, :]
+        sa_valid = state.get("sa_valid")
+        if sa_valid is not None:
+            cost_all = jnp.where(sa_valid[None, :], cost_all,
+                                 CHURN_POISON_US)
         zero = jnp.where(valid[:, None], 1.0, 0.0)
         return dict(job=job, layer=layer, valid=valid, dep=dep,
                     ready_rel=ready_rel * valid,
@@ -319,7 +347,7 @@ class SchedulingEnv:
 
     # ---------------- one full period (traceable) ----------------
     def period(self, state: State, trace: Trace, act_fn,
-               commit_only: bool = False):
+               commit_only: bool = False, churn=None):
         """act_fn(feats, mask, slots, state) -> (a (R,G), prio (R,), sa (R,)).
 
         Returns (new_state, transition dict, info dict).
@@ -328,7 +356,19 @@ class SchedulingEnv:
         caller discards the transition (its reward/``s2`` need every
         finish time); ``new_state`` and ``info["committed"]`` are
         bit-identical either way.
+
+        ``churn``: optional per-period churn row ``dict(valid (M,),
+        lat_mult (M,), bw_mult (M,))`` (one slice of a compiled
+        ``repro.sim.churn`` schedule).  Injected into the state seen by
+        :meth:`build_slots` and ``act_fn`` as ``sa_valid`` /
+        ``lat_mult`` / ``bw_mult`` — policies read ``state.get(
+        "sa_valid")`` to mask allocation — and stripped from the
+        returned state so the scan carry keeps its static structure.
         """
+        if churn is not None:
+            state = {**state, "sa_valid": churn["valid"],
+                     "lat_mult": churn["lat_mult"],
+                     "bw_mult": churn["bw_mult"]}
         t = state["t"]
         state = self.mark_drops(state, trace, t)
         slots = self.build_slots(state, trace, cutoff=t)
@@ -346,11 +386,14 @@ class SchedulingEnv:
         trans = dict(s=feats, mask=mask, a=a, r=r, s2=feats2, mask2=mask2)
         info = dict(reward=r,
                     committed=jnp.sum(slots["valid"] & (start < self.cfg.t_s_us)))
+        if churn is not None:
+            new_state = {k: v for k, v in new_state.items()
+                         if k not in _CHURN_KEYS}
         return new_state, trans, info
 
     # ---------------- whole episode (traceable, vmap-able) ----------------
     def episode(self, state: State, trace: Trace, act_fn, aux=None,
-                key=None, collect: bool = True):
+                key=None, collect: bool = True, churn=None):
         """Run all ``cfg.periods`` periods inside one ``jax.lax.scan``.
 
         act_fn(feats, mask, slots, state, key, aux) -> (a, prio, sa):
@@ -365,6 +408,14 @@ class SchedulingEnv:
           leading dim ``periods`` (the policy path's pre-drawn
           exploration noise — RNG inside the period scan costs real
           time on CPU, so the whole episode block is drawn up front).
+
+        - ``churn`` is an optional compiled churn schedule
+          ``dict(valid (periods, M) bool, lat_mult / bw_mult
+          (periods, M) f32)`` from ``repro.sim.churn`` — pure trace
+          data scanned alongside ``keys``/``aux`` (the ``bind_tables``
+          no-recompile trick applied to fleet health), sliced into the
+          per-period rows :meth:`period` injects.  ``None`` leaves the
+          static-fleet program untouched.
 
         Entirely traceable: jit it once and ``vmap`` over stacked
         (state, trace, key, aux) for device-resident batched rollouts.
@@ -381,14 +432,16 @@ class SchedulingEnv:
                 else jnp.zeros((periods, 2), jnp.uint32))
 
         def step(st, xs):
-            k, a = xs
+            k, a, c = xs if churn is not None else (*xs, None)
             new_st, trans, info = self.period(
                 st, trace,
                 lambda feats, mask, slots, s: act_fn(feats, mask, slots,
-                                                     s, k, a))
+                                                     s, k, a),
+                churn=c)
             return new_st, ((trans if collect else {}), info)
 
-        final, (transitions, infos) = jax.lax.scan(step, state, (keys, aux))
+        xs = (keys, aux) if churn is None else (keys, aux, churn)
+        final, (transitions, infos) = jax.lax.scan(step, state, xs)
         final = self.mark_drops(final, trace, final["t"])
         return final, transitions, infos, self.metrics(final, trace)
 

@@ -11,6 +11,9 @@ from repro.runtime import (CompressionState, FailureInjector,
                            decompress_grads, quantize_int8, dequantize_int8,
                            run_with_restarts, topk_sparsify)
 from repro.runtime.compression import compression_ratio
+from repro.runtime.elastic import join_schedule
+from repro.runtime.fault import failure_schedule
+from repro.runtime.straggler import slowdown_schedule, throttle_schedule
 
 
 # ---------------------------------------------------------------- fault
@@ -43,6 +46,26 @@ def test_injector_does_not_refire_on_replay():
     inj.maybe_fail(3)                       # replay passes
 
 
+def test_run_with_restarts_counts_multiple_failures():
+    """Two distinct injected failures -> two restarts, and the final
+    state still reflects exactly total_steps optimizer updates."""
+    saved = {}
+    injector = FailureInjector(at_steps=(4, 9))
+
+    def step_fn(state, step):
+        injector.maybe_fail(step)
+        return state + 1
+
+    state, restarts = run_with_restarts(
+        init_fn=lambda: (0, 0),
+        restore_fn=lambda: saved.get("s"),
+        step_fn=step_fn,
+        save_fn=lambda s, step: saved.__setitem__("s", (s, step)),
+        total_steps=12, ckpt_every=3)
+    assert restarts == 2
+    assert state == 12
+
+
 def test_run_with_restarts_gives_up():
     inj = FailureInjector(at_steps=(1,))
     inj._fired = set()                      # force refire every time
@@ -71,6 +94,56 @@ def test_time_budget_drops_stragglers():
 
     out = budget.collect([slow, slow, fast, fast], min_items=1)
     assert 1 <= len(out) < 4                # tail got dropped
+
+
+def test_time_budget_collect_min_items_floor():
+    """An exhausted budget still delivers min_items (the drop trick
+    never starves the consumer) and preserves producer order."""
+    budget = TimeBudget(seconds=0.0)
+    time.sleep(0.01)                        # guarantee exhaustion
+    assert budget.exhausted
+    out = budget.collect([lambda: 1, lambda: 2, lambda: 3], min_items=2)
+    assert out == [1, 2]
+
+
+def test_time_budget_collect_all_when_not_exhausted():
+    budget = TimeBudget(seconds=30.0)
+    out = budget.collect([lambda: i for i in range(4)], min_items=1)
+    assert len(out) == 4
+
+
+# ------------------------------------------- churn event generators
+def test_failure_schedule_window_distinct_and_clamped():
+    rng = np.random.default_rng(0)
+    p, sa = failure_schedule(rng, periods=20, num_sas=4, n=10)
+    assert len(p) == len(sa) == 3           # clamped: one SA survives
+    assert p.dtype == np.int32 and sa.dtype == np.int32
+    assert (p >= 5).all() and (p < 15).all()    # window (0.25, 0.75)
+    assert len(set(sa.tolist())) == 3           # distinct targets
+    p2, sa2 = failure_schedule(np.random.default_rng(0), periods=20,
+                               num_sas=4, n=10)
+    assert np.array_equal(p, p2) and np.array_equal(sa, sa2)
+
+
+def test_join_schedule_shapes_and_window():
+    p, sa = join_schedule(np.random.default_rng(1), periods=16, num_sas=6,
+                          n=2, window=(0.5, 1.0))
+    assert len(p) == 2
+    assert (p >= 8).all() and (p < 16).all()
+    assert len(set(sa.tolist())) == 2
+
+
+def test_degradation_schedules_magnitude():
+    for fn in (slowdown_schedule, throttle_schedule):
+        p, sa, mag = fn(np.random.default_rng(2), periods=12, num_sas=5,
+                        n=3, magnitude=6.0)
+        assert len(p) == len(sa) == len(mag) == 3
+        assert (mag == np.float32(6.0)).all()
+        assert len(set(sa.tolist())) == 3
+    # n clamps to the fleet width (degradation may hit every SA)
+    p, sa, _ = slowdown_schedule(np.random.default_rng(3), periods=12,
+                                 num_sas=2, n=9)
+    assert len(sa) == 2
 
 
 # ----------------------------------------------------------- compression

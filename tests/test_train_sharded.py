@@ -3,10 +3,10 @@
 device-folded key streams, global-gather sampling vs the single-ring
 oracle, driver --devices validation and routing, and subprocess parity
 at 2 forced host devices — the mesh shard_map path vs the vmap oracle
-AND the retiring pmap arm (metrics, final DDPGState, replica
-bit-identity, and ring contents under the fixed device-keyed stream) —
-plus a generalist 2-device x 2-fleet driver smoke and cross-device-count
-checkpoint resumes in both directions."""
+(metrics, final DDPGState, replica bit-identity, and ring contents
+under the fixed device-keyed stream) — plus a generalist 2-device x
+2-fleet driver smoke and cross-device-count checkpoint resumes in both
+directions."""
 import json
 import os
 import subprocess
@@ -219,9 +219,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import ddpg as D, policy as P
 from repro.core.replay import replay_fields, replay_init, replay_pair_init
-from repro.core.train import (make_device_mesh, make_pmap_train_rounds,
+from repro.core.train import (make_device_mesh,
                               make_sharded_train_rounds, mesh_replicate,
-                              replicate, round_keys, shard_round_keys,
+                              round_keys, shard_round_keys,
                               sharded_rounds_reference, unreplicate)
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.env import EnvConfig, SchedulingEnv
@@ -261,39 +261,28 @@ ref = sharded_rounds_reference(env, dcfg, num_devices=2, **KW)
 s2, p2, sg2, m2 = ref(stack2(state), stack2(pair), dkeys,
                       jnp.stack([jnp.float32(0.4)] * 2), flags)
 
-# the retiring pmap arm (local sampling + gradient pmean) on the same
-# device-keyed stream — math-equal to the gathered global batch up to
-# float reassociation (equal shards: mean-of-means == global mean)
-state, pair = fresh()
-pm = make_pmap_train_rounds(env, dcfg, devices=DEV, **KW)
-s3, p3, sg3, m3 = pm(replicate(state, DEV), replicate(pair, DEV), dkeys,
-                     replicate(jnp.float32(0.4), DEV), flags)
-
 for k in m1:
     assert np.allclose(np.asarray(m1[k]), np.asarray(m2[k]), atol=1e-4), k
-    assert np.allclose(np.asarray(m1[k]), np.asarray(m3[k]), atol=1e-4), k
-for other in (s2, s3):
-    deltas = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
-                          unreplicate(s1).actor, unreplicate(other).actor)
-    assert max(jax.tree.leaves(deltas)) < 1e-4
+deltas = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                      unreplicate(s1).actor, unreplicate(s2).actor)
+assert max(jax.tree.leaves(deltas)) < 1e-4
 # gathered global batches make every replica consume identical inputs:
 # the shard_map learner must stay BIT-identical across devices
 for leaf in jax.tree.leaves(jax.tree.map(
         lambda x: float(jnp.max(jnp.abs(x[0] - x[1]))), s1.actor)):
     assert leaf == 0.0
-# ring contents: the fixed device-keyed stream makes shard_map, pmap
-# and the vmap oracle fill identical per-device rings (wrap included)
-for p_other in (p2, p3):
-    for ring in ("read", "write"):
-        for k in replay_fields(p1[ring]):
-            a, b = np.asarray(p1[ring][k]), np.asarray(p_other[ring][k])
-            if a.dtype == bool:
-                assert np.array_equal(a, b), (ring, k)
-            else:
-                assert np.allclose(a, b, atol=1e-6), (ring, k)
-        for k in ("ptr", "size"):
-            assert np.array_equal(np.asarray(p1[ring][k]),
-                                  np.asarray(p_other[ring][k])), (ring, k)
+# ring contents: the fixed device-keyed stream makes shard_map and the
+# vmap oracle fill identical per-device rings (wrap included)
+for ring in ("read", "write"):
+    for k in replay_fields(p1[ring]):
+        a, b = np.asarray(p1[ring][k]), np.asarray(p2[ring][k])
+        if a.dtype == bool:
+            assert np.array_equal(a, b), (ring, k)
+        else:
+            assert np.allclose(a, b, atol=1e-6), (ring, k)
+    for k in ("ptr", "size"):
+        assert np.array_equal(np.asarray(p1[ring][k]),
+                              np.asarray(p2[ring][k])), (ring, k)
 assert int(p1["read"]["size"][0]) == 16     # wrapped: capacity reached
 print("PARITY_OK")
 """
@@ -310,8 +299,9 @@ checks = [
     (dict(devices=2, batch_episodes=2, replay_capacity=121),
      "replay-capacity 121"),
     (dict(devices=2, batch_episodes=2, episodes=5), "multiple of"),
-    (dict(devices=2, batch_episodes=2, sharded_impl="spmd"),
-     "--sharded-impl must be shard_map|pmap"),
+    (dict(devices=2, batch_episodes=2, churn="fail"),
+     "single-device feature"),
+    (dict(devices=1, churn="meteor"), "--churn must be one of"),
 ]
 for kw, frag in checks:
     try:
@@ -325,7 +315,7 @@ print("VALIDATION_OK")
 
 
 @pytest.mark.slow
-def test_shard_map_matches_pmap_and_vmap_oracle_subproc():
+def test_shard_map_matches_vmap_oracle_subproc():
     r = subprocess.run([sys.executable, "-c", _PARITY_SCRIPT], env=ENV2,
                        cwd=REPO, capture_output=True, text=True, timeout=540)
     assert "PARITY_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-1500:]
