@@ -43,10 +43,16 @@ def bench_meta() -> dict:
     are only comparable across runs on the same jax/backend, and
     ``host_cores`` qualifies forced-host-device scaling rows (on a
     1-core box they measure dispatch overhead, not speedup — see
-    docs/BENCHMARKS.md)."""
+    docs/BENCHMARKS.md).  ``git_sha`` (``-dirty`` suffixed for an
+    unclean tree) and ``created_at`` come from
+    ``repro.telemetry.runmeta`` — the same provenance the telemetry
+    run header stamps, so a benchmark artifact and a JSONL stream from
+    the same build are joinable on the SHA."""
+    from repro.telemetry.runmeta import git_sha, iso_now
     return dict(jax_version=jax.__version__,
                 backend=jax.default_backend(),
-                host_cores=os.cpu_count() or 1)
+                host_cores=os.cpu_count() or 1,
+                git_sha=git_sha(), created_at=iso_now())
 
 
 def _ckpt(w: str) -> str:

@@ -15,6 +15,17 @@ if grep -rn "jax\.pmap" src/repro/core; then
        "shard_map path (docs/ARCHITECTURE.md 'Mesh-sharded rounds')" >&2
   exit 1
 fi
+# print lint: all user-facing output flows through the telemetry plane
+# (tele.note / tele.emit / console_line) so every line has a JSONL twin
+# when --log-jsonl is on; the only sanctioned print() under src/repro
+# is the console backend itself (docs/OBSERVABILITY.md).
+if grep -rn "\bprint(" src/repro | grep -v "src/repro/telemetry/console.py"
+then
+  echo "ERROR: bare print() under src/repro — emit through" \
+       "repro.telemetry (console_line / tele.note / tele.emit;" \
+       "docs/OBSERVABILITY.md)" >&2
+  exit 1
+fi
 python -m pytest -x -q "$@"
 # README quickstart, run verbatim (keeps the docs honest): the ~60-line
 # end-to-end example; SKIP_QUICKSTART=1 skips it.
@@ -227,4 +238,24 @@ if fl["tick_p99_us"] > cl["tick_p99_us"] / 0.7 \
              f"{fl['latency_ratio']} > 1/0.7x committed "
              f"{cl['latency_ratio']}")
 PY
+fi
+# telemetry smoke: a 2-round trainer and a batched serving run, each
+# streaming --log-jsonl, then scripts/metrics_summary.py validates
+# every line against repro.telemetry.schema and requires the stream's
+# load-bearing record kinds (see docs/OBSERVABILITY.md);
+# SKIP_TELEMETRY=1 skips.
+if [ -z "${SKIP_TELEMETRY:-}" ]; then
+  python -m repro.launch.rl_train --workload light --episodes 4 \
+    --batch-episodes 2 --periods 6 --max-rq 16 --max-jobs 8 --hidden 8 \
+    --updates-per-episode 2 --batch-size 8 --replay-capacity 64 \
+    --warmup-episodes 2 --eval-every 100 --eval-seeds 2 \
+    --outdir "$CI_TMP/telemetry_smoke" \
+    --log-jsonl "$CI_TMP/telemetry_train.jsonl"
+  python scripts/metrics_summary.py "$CI_TMP/telemetry_train.jsonl" \
+    --require run_header,train_round,train_eval,span,run_end
+  python -m repro.launch.serve --workload light --policy fcfs --batched \
+    --streams 4 --requests 8 --periods 8 --max-rq 16 --max-jobs 16 \
+    --window 8 --log-jsonl "$CI_TMP/telemetry_serve.jsonl"
+  python scripts/metrics_summary.py "$CI_TMP/telemetry_serve.jsonl" \
+    --require run_header,serve_window,tenant,serve_summary,run_end
 fi

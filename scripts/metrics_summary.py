@@ -1,0 +1,143 @@
+"""Validate and summarize a telemetry JSONL stream.
+
+  PYTHONPATH=src python scripts/metrics_summary.py runs/train.jsonl \
+      [--require run_header,train_round] [--quiet]
+
+Every line is parsed and checked against ``repro.telemetry.schema``;
+the exit code is non-zero if any line fails to parse/validate or a
+``--require``'d record kind never appears — this is the contract
+``scripts/ci.sh`` enforces on fresh training and serving streams.
+
+The summary renders per-kind counts plus a digest of the interesting
+kinds: run provenance from the header, the training SLA trajectory,
+serving window quantiles, the per-tenant SLA table, and span timings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import Counter, defaultdict
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.telemetry.schema import SchemaError, validate_record  # noqa: E402
+
+
+def load_stream(path: str) -> tuple[list[dict], list[str]]:
+    """-> (valid records, error strings); never raises on bad lines."""
+    records, errors = [], []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"line {ln}: not JSON ({e})")
+                continue
+            try:
+                records.append(validate_record(rec))
+            except SchemaError as e:
+                errors.append(f"line {ln}: {e}")
+    return records, errors
+
+
+def _fmt(v, nd=3):
+    return f"{v:.{nd}f}" if isinstance(v, float) else str(v)
+
+
+def summarize(records: list[dict]) -> str:
+    """Human-readable digest of a validated stream."""
+    kinds = Counter(r["kind"] for r in records)
+    by = defaultdict(list)
+    for r in records:
+        by[r["kind"]].append(r)
+    lines = [f"{len(records)} records: " +
+             ", ".join(f"{k}={n}" for k, n in sorted(kinds.items()))]
+    for h in by.get("run_header", []):
+        lines.append(f"run {h['run_id']} role={h['role']} "
+                     f"git={h['git_sha'][:12]} jax={h['jax_version']} "
+                     f"backend={h['backend']} at {h['created_at']}")
+    rounds = by.get("train_round", [])
+    if rounds:
+        first, last = rounds[0], rounds[-1]
+        best = max(r["sla"] for r in rounds)
+        lines.append(f"train: {len(rounds)} rounds, ep "
+                     f"{first['episode']}..{last['episode']}, "
+                     f"sla {_fmt(first['sla'])} -> {_fmt(last['sla'])} "
+                     f"(best {_fmt(best)}), sigma {_fmt(last['sigma'])}")
+        fills = [r["replay_fill"] for r in rounds if "replay_fill" in r]
+        if fills:
+            lines.append(f"       replay fill {_fmt(float(fills[-1]))}, "
+                         f"committed "
+                         f"{sum(r.get('committed', 0) for r in rounds)}")
+    for r in by.get("train_eval", []):
+        lines.append(f"eval @ep {r['episode']}: {_fmt(r['eval_sla'], 4)}")
+    for r in by.get("baseline", []):
+        lines.append(f"baseline {r['name']}: {_fmt(r['sla_rate'])}")
+    wins = by.get("serve_window", [])
+    if wins:
+        p50s = [w["tick_p50_us"] for w in wins]
+        lines.append(f"serve: {len(wins)} windows, ticks "
+                     f"{wins[0]['tick_first']}..{wins[-1]['tick_last']}, "
+                     f"tick_p50 {min(p50s):.0f}..{max(p50s):.0f}us, "
+                     f"admitted {sum(w['admitted'] for w in wins)} "
+                     f"deferred {sum(w['deferred'] for w in wins)} "
+                     f"completed {sum(w['completed'] for w in wins)}")
+    for r in by.get("serve_episode", []):
+        lines.append(f"serve ep {r['episode']}: sla {_fmt(r['sla_rate'])} "
+                     f"energy {r['energy_uj']:.0f}uJ")
+    tenants = by.get("tenant", [])
+    if tenants:
+        lines.append("tenants:")
+        for t in tenants:
+            sla = "  n/a" if t["sla_rate"] is None else _fmt(t["sla_rate"])
+            lines.append(f"  {t['tenant']:>20s}  jobs={t['jobs']:<4d} "
+                         f"sla={sla}")
+    for r in by.get("serve_summary", []):
+        lines.append(f"serve summary: sla {_fmt(r['sla_rate'])} "
+                     f"counted={r['counted']} ticks={r['ticks']}")
+    spans = by.get("span", [])
+    if spans:
+        tot = defaultdict(float)
+        n = Counter()
+        for s in spans:
+            tot[s["name"]] += s["secs"]
+            n[s["name"]] += 1
+        lines.append("spans: " + ", ".join(
+            f"{k}={tot[k]:.2f}s/{n[k]}x" for k in sorted(tot)))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="validate + summarize a telemetry JSONL stream")
+    ap.add_argument("path", help="JSONL file written via --log-jsonl")
+    ap.add_argument("--require", default="",
+                    help="comma-separated record kinds that must appear "
+                         "at least once (exit 1 otherwise)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the summary; only validate")
+    args = ap.parse_args(argv)
+
+    records, errors = load_stream(args.path)
+    for e in errors:
+        print(f"INVALID {args.path}: {e}", file=sys.stderr)
+    missing = [k for k in filter(None, args.require.split(","))
+               if not any(r["kind"] == k for r in records)]
+    for k in missing:
+        print(f"MISSING {args.path}: no {k!r} record", file=sys.stderr)
+    if not args.quiet:
+        print(summarize(records))
+    if errors or missing:
+        return 1
+    print(f"OK {args.path}: {len(records)} records valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import policy as P
 from repro.core.generalist.env import PaddedEnv
+from repro.telemetry.console import console_line
 from repro.core.generalist.features import (GeneralistSpec,
                                             generalist_act_fn)
 from repro.core.rollout import (_eval_churn_schedules, _runner_cache,
@@ -169,7 +170,7 @@ def load_generalist_checkpoint(ckpt_dir: str | None, *,
     try:
         params, _, _ = restore_checkpoint(ckpt_dir, params)
     except (ValueError, KeyError, FileNotFoundError) as e:
-        print(f"[generalist] checkpoint in {ckpt_dir} matched but failed "
+        console_line(f"[generalist] checkpoint in {ckpt_dir} matched but failed "
               f"to restore ({e}); params are untrained")
         restored = False
     return params, pcfg, spec, restored

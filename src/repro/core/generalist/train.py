@@ -36,6 +36,8 @@ from repro.core.replay import (replay_add, replay_init, replay_pair_step,
 from repro.core.rollout import _runner_cache
 from repro.core.train import INFO_KEYS, MESH_AXIS, Mesh, _jit_shard_map
 from repro.sim.churn import churn_schedules_jax
+from repro.telemetry.metrics import (ROUND_TELE_COUNTS, ROUND_TELE_GAUGES,
+                                     round_telemetry)
 
 Metrics = dict[str, jnp.ndarray]
 
@@ -106,7 +108,8 @@ def generalist_update_rounds(state: D.DDPGState, dcfg: D.DDPGConfig,
 def _generalist_round_body(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
                            batch_episodes: int, num_updates: int,
                            batch_size: int, sigma_min: float,
-                           sigma_decay: float, arrivals=None, churn=None):
+                           sigma_decay: float, arrivals=None, churn=None,
+                           telemetry: bool = False):
     """Pure single-round body: sample fleet -> bind tables -> collect ->
     ring write (+fleet column) -> gated update scan -> sigma decay.
 
@@ -160,6 +163,12 @@ def _generalist_round_body(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
                        energy_uj=jnp.mean(mets["energy_uj"]),
                        sigma=sigma, did_update=do_update,
                        fleet=f, **info)
+        if telemetry:
+            with jax.named_scope("relmas.telemetry"):
+                metrics.update(round_telemetry(
+                    mets["sla_rate"], einfos["reward"],
+                    einfos["committed"], buf["size"],
+                    buf["r"].shape[0]))
         return state, buf, sigma, metrics
 
     return round_fn
@@ -172,7 +181,8 @@ def _cache_key(tag: str, dcfg, n_envs: int, kw: dict[str, Any]):
 def make_generalist_round(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
                           batch_episodes: int, num_updates: int,
                           batch_size: int, sigma_min: float,
-                          sigma_decay: float, arrivals=None, churn=None):
+                          sigma_decay: float, arrivals=None, churn=None,
+                          telemetry: bool = False):
     """One fleet-sampling training round as ONE jitted donated call.
 
     Same contract as ``core.train.make_train_round`` (``state``/``buf``
@@ -182,7 +192,8 @@ def make_generalist_round(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn)
+              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn,
+              telemetry=telemetry)
     key_ = _cache_key("generalist_round", dcfg, len(envs), kw)
     cache = _runner_cache(envs[0])
     if key_ not in cache:
@@ -194,13 +205,15 @@ def make_generalist_round(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
 def make_generalist_rounds(envs: list[PaddedEnv], dcfg: D.DDPGConfig, *,
                            batch_episodes: int, num_updates: int,
                            batch_size: int, sigma_min: float,
-                           sigma_decay: float, arrivals=None, churn=None):
+                           sigma_decay: float, arrivals=None, churn=None,
+                           telemetry: bool = False):
     """A chunk of R fleet-sampling rounds in one ``lax.scan`` dispatch —
     the generalist twin of ``core.train.make_train_rounds`` (``keys``
     (R, 2), ``do_update`` (R,), metrics stacked over rounds)."""
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn)
+              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn,
+              telemetry=telemetry)
     key_ = _cache_key("generalist_rounds", dcfg, len(envs), kw)
     cache = _runner_cache(envs[0])
     if key_ in cache:
@@ -234,7 +247,8 @@ def _sharded_generalist_round_body(envs: list[PaddedEnv],
                                    sigma_min: float, sigma_decay: float,
                                    arrivals=None,
                                    axis_name: str = MESH_AXIS,
-                                   update_gather: bool = True):
+                                   update_gather: bool = True,
+                                   telemetry: bool = False):
     """Per-device generalist round body under a mapped ``axis_name``.
 
     The sharded twin of ``repro.core.train._sharded_round_body`` with
@@ -299,6 +313,19 @@ def _sharded_generalist_round_body(envs: list[PaddedEnv],
                        energy_uj=pm(jnp.mean(mets["energy_uj"])),
                        sigma=sigma, did_update=do_update,
                        fleet=f, **info)
+        if telemetry:
+            # counts psum / gauges pmean to the global view, matching
+            # core.train._sharded_round_body
+            with jax.named_scope("relmas.telemetry"):
+                tele = round_telemetry(
+                    mets["sla_rate"], einfos["reward"],
+                    einfos["committed"], pair["read"]["size"],
+                    pair["read"]["r"].shape[0])
+                for k in ROUND_TELE_COUNTS:
+                    tele[k] = jax.lax.psum(tele[k], axis_name)
+                for k in ROUND_TELE_GAUGES:
+                    tele[k] = jax.lax.pmean(tele[k], axis_name)
+                metrics.update(tele)
         return state, pair, sigma, metrics
 
     return round_fn
@@ -323,7 +350,8 @@ def make_sharded_generalist_rounds(envs: list[PaddedEnv],
                                    dcfg: D.DDPGConfig, *, mesh: Mesh,
                                    batch_episodes: int, num_updates: int,
                                    batch_size: int, sigma_min: float,
-                                   sigma_decay: float, arrivals=None):
+                                   sigma_decay: float, arrivals=None,
+                                   telemetry: bool = False):
     """A chunk of R fleet-sampling rounds sharded over ``mesh`` in one
     jitted ``shard_map`` dispatch.
 
@@ -342,7 +370,8 @@ def make_sharded_generalist_rounds(envs: list[PaddedEnv],
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals)
+              sigma_decay=sigma_decay, arrivals=arrivals,
+              telemetry=telemetry)
     key_ = _cache_key("shardmap_generalist_rounds", dcfg, len(envs), kw) \
         + (mesh,)
     cache = _runner_cache(envs[0])
@@ -362,7 +391,8 @@ def sharded_generalist_rounds_reference(envs: list[PaddedEnv],
                                         num_updates: int, batch_size: int,
                                         sigma_min: float,
                                         sigma_decay: float, arrivals=None,
-                                        update_gather: bool = True):
+                                        update_gather: bool = True,
+                                        telemetry: bool = False):
     """Single-device vmap oracle for
     :func:`make_sharded_generalist_rounds` (same signature and (D, R)
     output layout; the ``pmean`` / ``all_gather`` collectives resolve
@@ -372,7 +402,8 @@ def sharded_generalist_rounds_reference(envs: list[PaddedEnv],
     behaviour)."""
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals)
+              sigma_decay=sigma_decay, arrivals=arrivals,
+              telemetry=telemetry)
     key_ = _cache_key("sharded_generalist_ref", dcfg, len(envs), kw) \
         + (num_devices, update_gather)
     cache = _runner_cache(envs[0])

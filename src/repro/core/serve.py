@@ -46,11 +46,15 @@ from repro.core.rollout import _runner_cache
 from repro.serving.queue import (queue_admit, queue_init, queue_metrics,
                                  queue_retire)
 from repro.sim.env import SchedulingEnv
+from repro.telemetry.metrics import counter_add, hist_add
 
 
-def queue_init_batch(env: SchedulingEnv, streams: int) -> dict:
-    """``streams`` empty queues, tree-stacked over a leading (S,) axis."""
-    one = queue_init(env)
+def queue_init_batch(env: SchedulingEnv, streams: int,
+                     telemetry: bool = False) -> dict:
+    """``streams`` empty queues, tree-stacked over a leading (S,) axis.
+    ``telemetry=True`` attaches the per-stream device telemetry block
+    (see ``repro.serving.queue.queue_telemetry_init``)."""
+    one = queue_init(env, telemetry=telemetry)
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x, (streams,) + x.shape), one)
 
@@ -118,18 +122,32 @@ def make_serving_tick(env: SchedulingEnv, *, kind: str = "specialist",
     act = _build_act(env, kind, pcfg, baseline_fn)
 
     def one(params, qs, adm, key):
-        qs, n_adm = queue_admit(env, qs, adm)
+        with jax.named_scope("serving.admit"):
+            qs, n_adm = queue_admit(env, qs, adm)
         # commit_only: the tick discards the transition, so the engine
         # may stop at the period-boundary start horizon — committed
         # results (and therefore all queue state) stay bit-identical
-        state, _, info = env.period(
-            qs["state"], qs["trace"],
-            lambda feats, mask, slots, st: act(params, feats, mask,
-                                               slots, st, key),
-            commit_only=True)
-        qs, out = queue_retire(env, {**qs, "state": state})
+        with jax.named_scope("serving.period"):
+            state, _, info = env.period(
+                qs["state"], qs["trace"],
+                lambda feats, mask, slots, st: act(params, feats, mask,
+                                                   slots, st, key),
+                commit_only=True)
+        with jax.named_scope("serving.retire"):
+            qs, out = queue_retire(env, {**qs, "state": state})
         out.update(n_admitted=n_adm, committed=info["committed"],
                    t_us=state["t"])
+        if "tele" in qs:
+            # across-tick device aggregates: trace-time structural gate
+            # (a queue without the block compiles the identical program,
+            # so telemetry-off ticks stay bit-for-bit unchanged)
+            with jax.named_scope("serving.telemetry"):
+                t = qs["tele"]
+                qs = {**qs, "tele": dict(
+                    depth_hist=hist_add(t["depth_hist"], out["depth"]),
+                    committed=counter_add(t["committed"],
+                                          info["committed"]),
+                    ticks=counter_add(t["ticks"], 1))}
         return qs, out
 
     @functools.partial(jax.jit, donate_argnums=(1,))
@@ -159,6 +177,14 @@ def make_serving_flush(env: SchedulingEnv, streams: int = 1):
         state = env.mark_drops(qs["state"], qs["trace"], qs["state"]["t"])
         qs, out = queue_retire(env, {**qs, "state": state})
         out.update(queue_metrics(qs))
+        if "tele" in qs:
+            # surface the device telemetry block as flat leaves the
+            # host can serialize (same tele_* convention as training)
+            out.update(
+                tele_depth_hist=qs["tele"]["depth_hist"]["counts"],
+                tele_depth_edges=qs["tele"]["depth_hist"]["edges"],
+                tele_committed=qs["tele"]["committed"],
+                tele_ticks=qs["tele"]["ticks"])
         return qs, out
 
     @functools.partial(jax.jit, donate_argnums=(0,))

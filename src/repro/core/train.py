@@ -81,6 +81,8 @@ from repro.core.replay import replay_add, replay_pair_step
 from repro.core.rollout import _runner_cache, collect_episodes
 from repro.sim.churn import churn_schedules_jax
 from repro.sim.env import SchedulingEnv
+from repro.telemetry.metrics import (ROUND_TELE_COUNTS, ROUND_TELE_GAUGES,
+                                     round_telemetry)
 
 Metrics = dict[str, jnp.ndarray]
 
@@ -113,13 +115,21 @@ def shard_round_keys(keys: jnp.ndarray, num_devices: int) -> jnp.ndarray:
 def _round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                 batch_episodes: int, num_updates: int, batch_size: int,
                 sigma_min: float, sigma_decay: float, arrivals=None,
-                churn=None):
+                churn=None, telemetry: bool = False):
     """Pure single-round body shared by the jitted round and the scan.
 
     ``churn`` (a :class:`~repro.sim.churn.ChurnConfig`, or ``None`` for
     a static fleet) splits one extra key per round and draws a fresh
     batched churn schedule on device — each episode of the batch trains
-    against its own fault/throttle/join trace."""
+    against its own fault/throttle/join trace.
+
+    ``telemetry`` additionally folds the round's in-graph telemetry
+    block (``repro.telemetry.metrics.round_telemetry``: SLA/reward
+    histograms, committed counter, replay-fill gauge) into the metrics
+    dict.  It only READS values the round already computes, so weights,
+    replay contents, and every pre-existing metric stay bit-identical
+    and the block rides the chunk's one existing metrics transfer —
+    no per-period host sync is added (``tests/test_telemetry.py``)."""
     pcfg = dcfg.policy
 
     def round_fn(state: D.DDPGState, buf: dict, key, sigma, do_update):
@@ -131,18 +141,22 @@ def _round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
             scheds = churn_schedules_jax(
                 churn, env.cfg.periods, env.num_sas,
                 jax.random.split(kchurn, batch_episodes))
-        traces, states = env.new_episodes_jax(ktrace, batch_episodes,
-                                              arrivals)
-        _, trans, einfos, mets = collect_episodes(
-            env, pcfg, state.actor, states, traces, kroll, sigma,
-            churn=scheds)
+        with jax.named_scope("relmas.trace_gen"):
+            traces, states = env.new_episodes_jax(ktrace, batch_episodes,
+                                                  arrivals)
+        with jax.named_scope("relmas.rollout"):
+            _, trans, einfos, mets = collect_episodes(
+                env, pcfg, state.actor, states, traces, kroll, sigma,
+                churn=scheds)
         # (episodes, periods, ...) -> (episodes * periods, ...) ring write
         flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in trans.items()}
-        buf = replay_add(buf, flat)
+        with jax.named_scope("relmas.ring_write"):
+            buf = replay_add(buf, flat)
 
         def upd(st):
-            st2, infos = D.ddpg_update_rounds(st, dcfg, buf, kup,
-                                              num_updates, batch_size)
+            with jax.named_scope("relmas.ddpg_update"):
+                st2, infos = D.ddpg_update_rounds(st, dcfg, buf, kup,
+                                                  num_updates, batch_size)
             return st2, {k: infos[k][-1] for k in INFO_KEYS}
 
         def no_upd(st):
@@ -155,6 +169,11 @@ def _round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                        reward=jnp.mean(einfos["reward"]),
                        energy_uj=jnp.mean(mets["energy_uj"]),
                        sigma=sigma, did_update=do_update, **info)
+        if telemetry:
+            with jax.named_scope("relmas.telemetry"):
+                metrics.update(round_telemetry(
+                    mets["sla_rate"], einfos["reward"],
+                    einfos["committed"], buf["size"], buf["r"].shape[0]))
         return state, buf, sigma, metrics
 
     return round_fn
@@ -167,7 +186,7 @@ def _cache_key(tag: str, dcfg, kw: dict[str, Any]):
 def make_train_round(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                      batch_episodes: int, num_updates: int, batch_size: int,
                      sigma_min: float, sigma_decay: float, arrivals=None,
-                     churn=None):
+                     churn=None, telemetry: bool = False):
     """One full training round as ONE jitted, donated device call.
 
     Returns ``round_fn(state, buf, key, sigma, do_update)`` ->
@@ -180,7 +199,8 @@ def make_train_round(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn)
+              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn,
+              telemetry=telemetry)
     key_ = _cache_key("train_round", dcfg, kw)
     cache = _runner_cache(env)
     if key_ not in cache:
@@ -192,7 +212,8 @@ def make_train_round(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
 def make_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                       batch_episodes: int, num_updates: int,
                       batch_size: int, sigma_min: float,
-                      sigma_decay: float, arrivals=None, churn=None):
+                      sigma_decay: float, arrivals=None, churn=None,
+                      telemetry: bool = False):
     """A chunk of R rounds fused into one ``lax.scan`` dispatch.
 
     Returns ``rounds_fn(state, buf, keys, sigma, do_update)`` ->
@@ -209,7 +230,8 @@ def make_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn)
+              sigma_decay=sigma_decay, arrivals=arrivals, churn=churn,
+              telemetry=telemetry)
     key_ = _cache_key("train_rounds", dcfg, kw)
     cache = _runner_cache(env)
     if key_ in cache:
@@ -311,7 +333,8 @@ def _sharded_round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                         num_updates: int, batch_size: int,
                         sigma_min: float, sigma_decay: float,
                         arrivals=None, axis_name: str = MESH_AXIS,
-                        update_gather: bool = True):
+                        update_gather: bool = True,
+                        telemetry: bool = False):
     """Per-device round body run under a mapped ``axis_name`` axis.
 
     Each device collects ``batch_episodes // num_devices`` episodes with
@@ -367,6 +390,22 @@ def _sharded_round_body(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                        reward=pm(jnp.mean(einfos["reward"])),
                        energy_uj=pm(jnp.mean(mets["energy_uj"])),
                        sigma=sigma, did_update=do_update, **info)
+        if telemetry:
+            # per-device aggregates reduced to the global view: counts
+            # (histograms, committed jobs) sum over the device axis,
+            # gauges (ring fill) average — every replica then carries
+            # the same global telemetry block, matching the pmean'd
+            # episode metrics above
+            with jax.named_scope("relmas.telemetry"):
+                tele = round_telemetry(
+                    mets["sla_rate"], einfos["reward"],
+                    einfos["committed"], pair["read"]["size"],
+                    pair["read"]["r"].shape[0])
+                for k in ROUND_TELE_COUNTS:
+                    tele[k] = jax.lax.psum(tele[k], axis_name)
+                for k in ROUND_TELE_GAUGES:
+                    tele[k] = jax.lax.pmean(tele[k], axis_name)
+                metrics.update(tele)
         return state, pair, sigma, metrics
 
     return round_fn
@@ -423,7 +462,7 @@ def make_sharded_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                               mesh: Mesh, batch_episodes: int,
                               num_updates: int, batch_size: int,
                               sigma_min: float, sigma_decay: float,
-                              arrivals=None):
+                              arrivals=None, telemetry: bool = False):
     """A chunk of R rounds sharded over ``mesh`` in one jitted
     ``shard_map`` dispatch (the pmap successor — pmap is
     soft-deprecated and caps at a single axis; the named mesh is what
@@ -459,7 +498,8 @@ def make_sharded_train_rounds(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals)
+              sigma_decay=sigma_decay, arrivals=arrivals,
+              telemetry=telemetry)
     key_ = _cache_key("shardmap_rounds", dcfg, kw) + (mesh,)
     cache = _runner_cache(env)
     if key_ not in cache:
@@ -475,7 +515,8 @@ def sharded_rounds_reference(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
                              num_devices: int, batch_episodes: int,
                              num_updates: int, batch_size: int,
                              sigma_min: float, sigma_decay: float,
-                             arrivals=None, update_gather: bool = True):
+                             arrivals=None, update_gather: bool = True,
+                             telemetry: bool = False):
     """Single-device vmap oracle for :func:`make_sharded_train_rounds`.
 
     The SAME per-device round body mapped with ``jax.vmap(...,
@@ -490,7 +531,8 @@ def sharded_rounds_reference(env: SchedulingEnv, dcfg: D.DDPGConfig, *,
     """
     kw = dict(batch_episodes=batch_episodes, num_updates=num_updates,
               batch_size=batch_size, sigma_min=sigma_min,
-              sigma_decay=sigma_decay, arrivals=arrivals)
+              sigma_decay=sigma_decay, arrivals=arrivals,
+              telemetry=telemetry)
     key_ = _cache_key("sharded_rounds_ref", dcfg, kw) + (num_devices,
                                                          update_gather)
     cache = _runner_cache(env)

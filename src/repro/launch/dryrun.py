@@ -40,6 +40,7 @@ from repro.configs.registry import (ARCHS, batch_specs, cache_specs,
                                     get_arch, shapes_for)
 from repro.launch import hlo_analysis as HA
 from repro.launch.mesh import make_production_mesh
+from repro.telemetry.console import console_line
 from repro.models import partition as PT
 from repro.models import sharding as shd
 from repro.models.model import build_model
@@ -265,15 +266,16 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     if verbose:
         dom = rec.get("roofline", rec.get("roofline_raw", {})).get(
             "dominant", "-")
-        print(f"[dryrun] {arch:>16s} x {shape_name:<12s} mesh={rec['mesh']:>8s} "
-              f"ok={rec['ok']} dominant={dom} "
-              f"(lower {rec.get('lower_s', '-')}s, "
-              f"compile {rec.get('compile_s', '-')}s)", flush=True)
+        console_line(f"[dryrun] {arch:>16s} x {shape_name:<12s} "
+                     f"mesh={rec['mesh']:>8s} "
+                     f"ok={rec['ok']} dominant={dom} "
+                     f"(lower {rec.get('lower_s', '-')}s, "
+                     f"compile {rec.get('compile_s', '-')}s)")
         if rec["ok"]:
-            print("  memory_analysis:", json.dumps(rec["mem"]), flush=True)
-            print("  cost_analysis:", json.dumps(rec["cost"]), flush=True)
+            console_line("  memory_analysis: " + json.dumps(rec["mem"]))
+            console_line("  cost_analysis: " + json.dumps(rec["cost"]))
         else:
-            print("  ERROR:", rec["error"], flush=True)
+            console_line("  ERROR: " + str(rec["error"]))
     return rec
 
 
@@ -323,8 +325,8 @@ def main(argv=None):
                 os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
                 with open(args.out, "a") as f:
                     f.write(json.dumps(rec) + "\n")
-    print(f"[dryrun] done: {len(cells) * len(meshes)} cells, "
-          f"{n_fail} failures", flush=True)
+    console_line(f"[dryrun] done: {len(cells) * len(meshes)} cells, "
+                 f"{n_fail} failures")
     return 1 if n_fail else 0
 
 

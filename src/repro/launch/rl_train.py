@@ -104,6 +104,8 @@ from repro.core.train import (INFO_KEYS, make_device_mesh,
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.churn import CHURN_SCENARIOS, churn_preset
 from repro.sim.env import EnvConfig, SchedulingEnv
+from repro.telemetry import (console_line, make_telemetry, profile_trace)
+from repro.telemetry.metrics import ROUND_TELE_KEYS
 from repro.workloads import build_registry
 
 
@@ -157,6 +159,12 @@ class TrainConfig:
     outdir: str = "runs/relmas"
     ckpt_every: int = 10
     fail_at: int = -1          # crash injection (episode index) for FT tests
+    # telemetry: "" disables the machine-readable stream; a path streams
+    # schema'd JSONL records there AND turns on the in-graph telemetry
+    # block inside the fused round (bit-neutral — see docs/OBSERVABILITY.md)
+    log_jsonl: str = ""
+    # capture a jax.profiler trace of the training loop into this dir
+    profile_dir: str = ""
 
 
 def _env_cfgs(cfg: TrainConfig) -> tuple[EnvConfig, ArrivalConfig]:
@@ -286,6 +294,15 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                 f"(a smaller tail round cannot split evenly over "
                 f"--devices {cfg.devices})")
     kind, fleets = _resolve_kind(cfg)
+    # telemetry session: console sink always (through log_fn, so test
+    # captures keep working), JSONL stream when --log-jsonl was given;
+    # the same flag turns on the in-graph telemetry block inside the
+    # fused round (bit-neutral, rides the existing chunk transfer)
+    if cfg.log_jsonl:
+        os.makedirs(os.path.dirname(cfg.log_jsonl) or ".", exist_ok=True)
+    tele = make_telemetry(log_fn=log_fn, jsonl_path=cfg.log_jsonl or None)
+    dev_tele = bool(cfg.log_jsonl)
+    tele.run_header("train", dataclasses.asdict(cfg))
     ecfg, arr = _env_cfgs(cfg)
     if kind == "generalist":
         envs = build_padded_envs(cfg.workload, fleets, ecfg, arr,
@@ -293,9 +310,9 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         env = envs[0]
         spec = GeneralistSpec(m_max=env.num_sas)
         pcfg = spec.pcfg(hidden=cfg.hidden)
-        log_fn(f"[generalist] fleets={','.join(fleets)} "
-               f"m_max={spec.m_max} desc_dim={spec.desc_dim} "
-               f"feat_dim={pcfg.feat_dim}")
+        tele.note(f"[generalist] fleets={','.join(fleets)} "
+                  f"m_max={spec.m_max} desc_dim={spec.desc_dim} "
+                  f"feat_dim={pcfg.feat_dim}")
     else:
         envs, spec = None, None
         env = build_env(cfg)
@@ -331,8 +348,8 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                     f"checkpoint in {cfg.outdir} is {ck_kind!r} but this "
                     f"run is {kind!r}; use a fresh --outdir")
             if ck_fleet != cfg.fleet:
-                log_fn(f"[resume] generalist checkpoint trained on "
-                       f"{ck_fleet!r}, continuing on {cfg.fleet!r}")
+                tele.note(f"[resume] generalist checkpoint trained on "
+                          f"{ck_fleet!r}, continuing on {cfg.fleet!r}")
         elif ck_fleet != cfg.fleet:
             # legacy per-fleet checkpoints stay platform-locked:
             # same-width fleets restore cleanly but are different
@@ -342,7 +359,7 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                 f"{ck_fleet!r} but --fleet is {cfg.fleet!r}; use a fresh "
                 f"--outdir to train a {cfg.fleet!r} agent")
         start_ep = meta.get("episode", 0) + 1
-        log_fn(f"[resume] restored checkpoint at episode {start_ep - 1}")
+        tele.note(f"[resume] restored checkpoint at episode {start_ep - 1}")
 
     baseline_scores: dict[str, dict] = {}
     if cfg.eval_baselines:
@@ -364,7 +381,8 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                   for e in benvs]
             m = {k: float(np.mean([x[k] for x in ms])) for k in ms[0]}
             baseline_scores[name] = {k: round(v, 4) for k, v in m.items()}
-            log_fn(f"[baseline] {name} sla={m['sla_rate']:.4f}")
+            tele.emit("baseline", name=name,
+                      sla_rate=round(m["sla_rate"], 4))
 
     sharded = cfg.devices > 1
     devs = jax.local_devices()[:cfg.devices]
@@ -378,8 +396,8 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         # minibatches, per-device double-buffered rings; see
         # docs/ARCHITECTURE.md "Mesh-sharded rounds"); default is the
         # single-device fused path
-        log_fn(f"[note] {len(jax.local_devices())} local devices; pass "
-               f"--devices N to shard the fused rounds over them")
+        tele.note(f"[note] {len(jax.local_devices())} local devices; pass "
+                  f"--devices N to shard the fused rounds over them")
 
     cap = cfg.replay_capacity // cfg.devices     # per-device ring shard
     buf = (generalist_replay_init(cap, env.seq_len, spec)
@@ -404,7 +422,7 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         kw = dict(batch_episodes=n,
                   num_updates=cfg.updates_per_episode * n,
                   batch_size=cfg.batch_size, sigma_min=cfg.sigma_min,
-                  sigma_decay=cfg.sigma_decay)
+                  sigma_decay=cfg.sigma_decay, telemetry=dev_tele)
         if churn_cfg is not None:   # single-device only (validated above)
             kw["churn"] = churn_cfg
         return kw
@@ -446,7 +464,8 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         ckpt_meta.update(m_max=spec.m_max, desc_dim=spec.desc_dim,
                          fleets=fleets)
 
-    for chunk in _plan_chunks(cfg, start_ep):
+    with profile_trace(cfg.profile_dir):
+      for chunk in _plan_chunks(cfg, start_ep):
         if chunk["fail"]:
             raise RuntimeError(f"injected failure at episode {cfg.fail_at}")
         rounds = chunk["rounds"]
@@ -454,31 +473,35 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         flags = np.array([s + m > cfg.warmup_episodes for s, m in rounds])
         keys = round_keys(cfg.seed + 1, chunk["round0"], len(rounds))
         t0 = time.time()
-        if sharded:
-            # chunk sharded over the device axis: ONE jitted shard_map
-            # dispatch; keys fold in the device index, the generalist's
-            # fleet draw uses the shared (replicated, un-sharded)
-            # round keys
-            rounds_fn = make_sharded(**trainer_kw(n))
-            dkeys = shard_round_keys(keys, cfg.devices)
-            args = ((state, buf, dkeys, keys, sigma, jnp.asarray(flags))
-                    if kind == "generalist" else
-                    (state, buf, dkeys, sigma, jnp.asarray(flags)))
-            state, buf, sigma, mets = rounds_fn(*args)
-            # row 0 carries the pmean'd global round averages
-            mets = jax.tree.map(lambda x: np.asarray(x)[0], mets)
-        elif len(rounds) == 1:
-            # single round (tail / tight cadence): one jitted dispatch
-            round_fn = make_round(**trainer_kw(n))
-            state, buf, sigma, mets = round_fn(state, buf, keys[0], sigma,
-                                               bool(flags[0]))
-            mets = jax.tree.map(lambda x: np.asarray(x)[None], mets)
-        else:
-            # a whole eval/ckpt chunk of rounds in one lax.scan dispatch
-            rounds_fn = make_rounds(**trainer_kw(n))
-            state, buf, sigma, mets = rounds_fn(state, buf, keys, sigma,
-                                                jnp.asarray(flags))
-            mets = jax.tree.map(np.asarray, mets)   # one transfer per chunk
+        # span "collect": the chunk dispatch INCLUDING the metrics
+        # transfer — the honest wall-clock cost of the fused rounds
+        with tele.span("collect", episodes=int(sum(m for _, m in rounds))):
+            if sharded:
+                # chunk sharded over the device axis: ONE jitted
+                # shard_map dispatch; keys fold in the device index, the
+                # generalist's fleet draw uses the shared (replicated,
+                # un-sharded) round keys
+                rounds_fn = make_sharded(**trainer_kw(n))
+                dkeys = shard_round_keys(keys, cfg.devices)
+                args = ((state, buf, dkeys, keys, sigma, jnp.asarray(flags))
+                        if kind == "generalist" else
+                        (state, buf, dkeys, sigma, jnp.asarray(flags)))
+                state, buf, sigma, mets = rounds_fn(*args)
+                # row 0 carries the pmean'd global round averages
+                mets = jax.tree.map(lambda x: np.asarray(x)[0], mets)
+            elif len(rounds) == 1:
+                # single round (tail / tight cadence): one jitted dispatch
+                round_fn = make_round(**trainer_kw(n))
+                state, buf, sigma, mets = round_fn(state, buf, keys[0],
+                                                   sigma, bool(flags[0]))
+                mets = jax.tree.map(lambda x: np.asarray(x)[None], mets)
+            else:
+                # a whole eval/ckpt chunk of rounds in one scan dispatch
+                rounds_fn = make_rounds(**trainer_kw(n))
+                state, buf, sigma, mets = rounds_fn(state, buf, keys, sigma,
+                                                    jnp.asarray(flags))
+                # one transfer per chunk
+                mets = jax.tree.map(np.asarray, mets)
         elapsed = max(time.time() - t0, 1e-9)
         chunk_eps = sum(m for _, m in rounds)
         pps = round(chunk_eps * cfg.periods / elapsed, 1)
@@ -497,8 +520,16 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                             for k in INFO_KEYS})
             history.append(rec)
             logf.write(json.dumps(rec) + "\n")
-            log_fn(f"[ep {ep:4d}] sla={rec['sla']:.3f} "
-                   f"sigma={rec['sigma']:.3f}")
+            emit = dict(rec)
+            if all(k in mets for k in ROUND_TELE_KEYS):
+                # the in-graph block: already on host via the chunk's
+                # existing metrics transfer — zero added syncs
+                emit.update(
+                    replay_fill=round(float(mets["tele_replay_fill"][i]), 4),
+                    sla_hist=[int(x) for x in mets["tele_sla_hist"][i]],
+                    reward_hist=[int(x) for x in mets["tele_reward_hist"][i]],
+                    committed=int(mets["tele_committed"][i]))
+            tele.emit("train_round", **emit)
         logf.flush()
 
         # chunk boundary: eval / best-checkpoint / periodic checkpoint
@@ -507,8 +538,10 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
         ep = rs + rn - 1
         st = unreplicate(state) if sharded else state
         if chunk["eval"]:
-            ev = eval_policy_fn(st.actor,
-                                seeds=range(7000, 7000 + cfg.eval_seeds))
+            with tele.span("eval"):
+                ev = eval_policy_fn(st.actor,
+                                    seeds=range(7000,
+                                                7000 + cfg.eval_seeds))
             history[-1]["eval_sla"] = round(ev["sla_rate"], 4)
             evrec = {"episode": ep, "eval_sla": history[-1]["eval_sla"]}
             if "per_fleet" in ev:
@@ -516,7 +549,7 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                 evrec["eval_sla_per_fleet"] = ev["per_fleet"]
             logf.write(json.dumps(evrec) + "\n")
             logf.flush()
-            log_fn(f"[ep {ep:4d}] eval={ev['sla_rate']:.4f}")
+            tele.emit("train_eval", **evrec)
             score = (min(ev["per_fleet"].values())
                      if cfg.best_metric == "min_fleet"
                      else ev["sla_rate"])   # validated in _resolve_kind
@@ -529,10 +562,13 @@ def train(cfg: TrainConfig, log_fn=print) -> dict:
                                    **ckpt_meta))
         if chunk["ckpt"]:
             # single-device arrays: restore works at any --devices
-            mgr.save(ep, st, dict(episode=ep, **ckpt_meta))
+            with tele.span("ckpt"):
+                mgr.save(ep, st, dict(episode=ep, **ckpt_meta))
     logf.close()
     if sharded:
         state = unreplicate(state)
+    tele.emit("run_end", best_sla=round(float(best.get("sla_rate", -1.0)), 4))
+    tele.close()
     return dict(best=best, history=history, env=env, pcfg=pcfg, state=state,
                 baselines=baseline_scores, policy_kind=kind, fleets=fleets,
                 spec=spec)
@@ -568,6 +604,11 @@ _HELP = {
     "eval_baselines": 'comma list scored on the eval seeds before '
                       'training, e.g. "fcfs,herald,magma" ("" = skip)',
     "fail_at": "inject a crash at this episode (fault-tolerance tests)",
+    "log_jsonl": "stream schema'd JSONL telemetry records to this path and "
+                 "enable the in-graph telemetry block (bit-neutral; "
+                 "validate/render with scripts/metrics_summary.py)",
+    "profile_dir": "capture a jax.profiler trace of the training loop "
+                   "into this directory (view in TensorBoard/Perfetto)",
 }
 
 
@@ -581,9 +622,9 @@ def main(argv=None):
                         default=f.default, help=_HELP.get(f.name, " "))
     args = ap.parse_args(argv)
     cfg = TrainConfig(**vars(args))
-    print(f"RELMAS DDPG training: {cfg}")
+    console_line(f"RELMAS DDPG training: {cfg}")
     out = train(cfg)
-    print(f"best eval: {out['best']}")
+    console_line(f"best eval: {out['best']}")
 
 
 if __name__ == "__main__":

@@ -13,8 +13,17 @@ Two serving modes:
   ``--streams`` concurrent request streams drawn by the
   ``serving.loadgen`` scenario generator (``--scenario``/
   ``--rate-scale``/``--requests``) and served by ONE jitted scheduling
-  tick per period across all streams; prints aggregate SLA plus the
-  serving telemetry (tick p50 wall time, deferrals, queue depth).
+  tick per period across all streams; prints aggregate SLA, the
+  per-tenant SLA table, plus the serving telemetry (tick p50 wall
+  time, deferrals, queue depth).
+
+Telemetry: ``--log-jsonl PATH`` streams schema'd records
+(``run_header`` / ``serve_window`` / ``serve_episode`` / ``tenant`` /
+``serve_summary`` — see ``repro.telemetry.schema``) alongside the
+console lines; ``--window N`` sets the batched mode's tick-window
+cadence; ``--profile-dir DIR`` captures a ``jax.profiler`` trace of
+the serving loop.  ``scripts/metrics_summary.py`` validates/renders
+the stream.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --workload mixed \
@@ -34,6 +43,7 @@ import numpy as np
 from repro.serving.service import MultiTenantService
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.env import EnvConfig
+from repro.telemetry import console_line, make_telemetry, profile_trace
 from repro.workloads import build_registry, build_llm_registry, \
     LM_WORKLOADS, WORKLOADS
 
@@ -60,29 +70,33 @@ def build_service(args) -> MultiTenantService:
                               env_cfg=ecfg, arrivals=arr)
 
 
-def serve_batched(svc: MultiTenantService, args) -> dict:
+def serve_batched(svc: MultiTenantService, args, tele) -> dict:
     """Drive the device-resident batched path on loadgen traffic."""
     from repro.serving.loadgen import LoadGenConfig, request_streams
     lg = LoadGenConfig(scenario=args.scenario, rate_scale=args.rate_scale,
                        n_requests=args.requests,
                        qos_factor=args.qos_factor, qos_level=args.qos)
     reqs = request_streams(svc.env, lg, args.streams, seed=9000)
-    res = svc.serve_stream(reqs, tick_k=args.tick_k, seed=9000)
+    with tele.span("serve"), profile_trace(args.profile_dir):
+        res = svc.serve_stream(reqs, tick_k=args.tick_k, seed=9000,
+                               telemetry=tele, window=args.window)
     agg, st = res["aggregate"], res["stats"]
     tick_p50 = float(np.median(st["tick_wall_us"]))
-    print(f"[serve batched] streams={args.streams} "
-          f"scenario={args.scenario} rate={args.rate_scale} "
-          f"sla={agg['sla_rate']:.3f} jobs={agg['counted']} "
-          f"energy={agg['energy_uj']:.0f}uJ")
-    print(f"    ticks={st['ticks']} tick_p50={tick_p50:.0f}us "
-          f"admitted={st['admitted']} deferred={st['deferred']} "
-          f"unserved={st['unserved']} mean_depth={st['mean_depth']:.1f}")
+    tele.note(f"[serve batched] streams={args.streams} "
+              f"scenario={args.scenario} rate={args.rate_scale} "
+              f"sla={agg['sla_rate']:.3f} jobs={agg['counted']} "
+              f"energy={agg['energy_uj']:.0f}uJ")
+    tele.note(f"    ticks={st['ticks']} tick_p50={tick_p50:.0f}us "
+              f"admitted={st['admitted']} deferred={st['deferred']} "
+              f"unserved={st['unserved']} mean_depth={st['mean_depth']:.1f}")
     out = {"policy": args.policy, "workload": args.workload,
            "scenario": args.scenario, "rate_scale": args.rate_scale,
            "streams": args.streams, "sla_rate": agg["sla_rate"],
            "counted": agg["counted"], "deferred": st["deferred"],
            "tick_p50_us": tick_p50}
-    print(json.dumps(out))
+    tele.emit("run_end", summary=out)
+    tele.close()
+    console_line(json.dumps(out))
     return out
 
 
@@ -129,26 +143,43 @@ def main(argv=None):
                          "base arrival rate (--batched)")
     ap.add_argument("--requests", type=int, default=32,
                     help="requests per stream (--batched)")
+    ap.add_argument("--log-jsonl", default="",
+                    help="stream schema'd JSONL telemetry records to this "
+                         "path (validate with scripts/metrics_summary.py)")
+    ap.add_argument("--window", type=int, default=16,
+                    help="serve_window record cadence in ticks "
+                         "(--batched; 0 disables windows)")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the serving "
+                         "loop into this directory")
     args = ap.parse_args(argv)
 
     svc = build_service(args)
+    tele = make_telemetry(jsonl_path=args.log_jsonl or None)
+    tele.run_header("serve", {k: v for k, v in vars(args).items()})
     if args.batched:
-        return serve_batched(svc, args)
+        return serve_batched(svc, args, tele)
     rates, energies = [], []
-    for ep in range(args.episodes):
-        m = svc.run_episode(seed=9000 + ep)
-        rates.append(m["sla_rate"])
-        energies.append(m["energy_uj"])
-        print(f"[serve ep {ep}] sla={m['sla_rate']:.3f} "
-              f"jobs={int(m['counted'])} energy={m['energy_uj']:.0f}uJ")
-        for tname, tm in m["per_tenant"].items():
-            if tm["jobs"]:
-                print(f"    {tname:>18s}: jobs={tm['jobs']:3d} "
-                      f"sla={tm['sla_rate']:.3f}")
+    with profile_trace(args.profile_dir):
+        for ep in range(args.episodes):
+            with tele.span("episode", episode=ep):
+                m = svc.run_episode(seed=9000 + ep)
+            rates.append(m["sla_rate"])
+            energies.append(m["energy_uj"])
+            tele.emit("serve_episode", episode=ep,
+                      sla_rate=float(m["sla_rate"]),
+                      counted=int(m["counted"]),
+                      energy_uj=float(m["energy_uj"]))
+            for tname, tm in m["per_tenant"].items():
+                if tm["jobs"]:
+                    tele.emit("tenant", tenant=tname, jobs=tm["jobs"],
+                              sla_rate=tm["sla_rate"])
     out = {"policy": args.policy, "workload": args.workload,
            "sla_rate_mean": float(np.mean(rates)),
            "energy_uj_mean": float(np.mean(energies))}
-    print(json.dumps(out))
+    tele.emit("run_end", summary=out)
+    tele.close()
+    console_line(json.dumps(out))
     return out
 
 

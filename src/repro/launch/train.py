@@ -38,6 +38,7 @@ from repro.models.steps import make_train_step
 from repro.runtime import (CompressionState, FailureInjector, compress_grads,
                            decompress_grads, run_with_restarts)
 from repro.runtime.elastic import device_put_like
+from repro.telemetry.console import console_line
 
 
 def build(cfg, mesh, rules, *, total_steps, compress=None):
@@ -141,15 +142,15 @@ def main(argv=None):
                        secs=round(time.time() - t0, 3))
             logf.write(json.dumps(rec) + "\n")
             logf.flush()
-            print(f"[train {cfg.name}] step {step:5d} loss {loss:.4f}")
+            console_line(f"[train {cfg.name}] step {step:5d} loss {loss:.4f}")
         return state
 
     state, restarts = run_with_restarts(
         init_fn=init_fn, restore_fn=restore_fn, step_fn=step_fn,
         save_fn=lambda s, step: mgr.save(step, s, {"step": step}),
         total_steps=args.steps, ckpt_every=args.ckpt_every,
-        on_event=lambda ev: print(f"[supervisor] {ev}"))
-    print(f"[train] done: final loss {losses[-1]:.4f} "
+        on_event=lambda ev: console_line(f"[supervisor] {ev}"))
+    console_line(f"[train] done: final loss {losses[-1]:.4f} "
           f"(first {losses[0]:.4f}), restarts={restarts}")
     return {"first_loss": losses[0] if losses else None,
             "final_loss": losses[-1] if losses else None,

@@ -40,14 +40,35 @@ import numpy as np
 
 from repro.sim.engine import INF
 from repro.sim.env import SchedulingEnv
+from repro.telemetry.metrics import counter_init, hist_init
 
 
-def queue_init(env: SchedulingEnv) -> dict:
+def queue_telemetry_init(max_jobs: int) -> dict:
+    """Device-resident telemetry block for one serving queue.
+
+    Lives as a ``"tele"`` subdict inside the donated queue pytree —
+    :func:`queue_admit` / :func:`queue_retire` pass it through
+    untouched (``{**qs, ...}``), the tick updates it in-graph, and
+    ``make_serving_flush`` surfaces it — so across-tick aggregates
+    (queue-depth histogram, committed sub-jobs, tick count) accumulate
+    on device with zero extra host transfers.  Depth-histogram edges
+    sit at eighths of queue capacity.
+    """
+    edges = [max_jobs * f for f in
+             (0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875)]
+    return dict(depth_hist=hist_init(edges),
+                committed=counter_init(),
+                ticks=counter_init())
+
+
+def queue_init(env: SchedulingEnv, telemetry: bool = False) -> dict:
     """Empty device queue for ``env`` (capacity = ``cfg.max_jobs``).
 
     The job table doubles as the env's episode ``trace``/``state``: free
     slots carry ``arrival = INF`` (never active, never overdue), so
-    ``env.period`` runs on the queue unchanged.
+    ``env.period`` runs on the queue unchanged.  ``telemetry=True``
+    attaches the :func:`queue_telemetry_init` block (a structural
+    change — the jitted tick re-traces, nothing else differs).
     """
     J = env.cfg.max_jobs
     trace = dict(
@@ -57,7 +78,7 @@ def queue_init(env: SchedulingEnv) -> dict:
         model=jnp.zeros((J,), jnp.int32),
         njl=jnp.zeros((J,), jnp.int32),
     )
-    return dict(
+    qs = dict(
         trace=trace,
         state=env.init_state(trace),
         occupied=jnp.zeros((J,), bool),
@@ -71,6 +92,9 @@ def queue_init(env: SchedulingEnv) -> dict:
             ten_hit=jnp.zeros((env.num_models,), jnp.int32),
         ),
     )
+    if telemetry:
+        qs["tele"] = queue_telemetry_init(J)
+    return qs
 
 
 def queue_admit(env: SchedulingEnv, qs: dict, adm: dict) -> tuple[dict, jnp.ndarray]:

@@ -46,6 +46,7 @@ from repro.serving.request import Request, resolve_request
 from repro.sim.arrivals import ArrivalConfig
 from repro.sim.engine import INF
 from repro.sim.env import EnvConfig, SchedulingEnv
+from repro.telemetry.console import console_line
 
 
 def per_tenant_metrics(env: SchedulingEnv, state, trace) -> dict[str, dict]:
@@ -124,16 +125,16 @@ class MultiTenantService:
                     ck_fleet = meta.get("fleet")
                     fleet = getattr(registry.mas, "name", None)
                     if ck_fleet and fleet and ck_fleet != fleet:
-                        print(f"[service] checkpoint trained on fleet "
-                              f"{ck_fleet!r}, serving {fleet!r}; "
-                              f"using untrained policy")
+                        console_line(f"[service] checkpoint trained on fleet "
+                                     f"{ck_fleet!r}, serving {fleet!r}; "
+                                     f"using untrained policy")
                     else:
                         params = restored
                 except (ValueError, KeyError, FileNotFoundError) as e:
                     # checkpoint trained for a different MAS shape (M
                     # changes feat/act dims) — serve with a fresh policy
-                    print(f"[service] checkpoint incompatible ({e}); "
-                          f"using untrained policy")
+                    console_line(f"[service] checkpoint incompatible ({e}); "
+                                 f"using untrained policy")
             self.params = params
             self.pcfg = pcfg
             self._period = make_policy_period(self.env, pcfg)
@@ -184,7 +185,7 @@ class MultiTenantService:
     # ------------------------------------------------------------------
     # device-resident batched path (one dispatch per tick, all streams)
     # ------------------------------------------------------------------
-    def _tick_fns(self, streams: int):
+    def _tick_fns(self, streams: int, device_telemetry: bool = False):
         # deferred import: repro.core.serve imports serving.queue, which
         # initializes this package — a module-level import here would
         # close the cycle during interpreter bootstrap
@@ -195,10 +196,12 @@ class MultiTenantService:
                                  baseline_fn=self._baseline_fn,
                                  streams=streams)
         flush = make_serving_flush(self.env, streams)
-        return tick, flush, queue_init_batch(self.env, streams)
+        return tick, flush, queue_init_batch(self.env, streams,
+                                             telemetry=device_telemetry)
 
     def serve_stream(self, request_streams, *, tick_k: int = 8,
-                     ticks: int | None = None, seed: int = 0) -> dict:
+                     ticks: int | None = None, seed: int = 0,
+                     telemetry=None, window: int = 0) -> dict:
         """Serve request streams through the batched single-dispatch tick.
 
         ``request_streams``: a list of per-stream ``Request`` lists (or
@@ -217,6 +220,16 @@ class MultiTenantService:
         :meth:`serve_episode_host`-schema dicts, ``completions`` the
         per-stream completion records, ``stats`` the serving telemetry
         (per-tick wall times, admitted/deferred counts, queue depths).
+
+        ``telemetry``: an optional :class:`repro.telemetry.Telemetry`
+        session.  When given, the queues carry the device-resident
+        telemetry block (depth histogram, committed/tick counters —
+        accumulated in-graph, read back only at the flush the path
+        already pays for) and the host emits ``serve_window`` records
+        every ``window`` ticks (0 disables windows), the per-tenant
+        ``tenant`` table aggregated across streams, and a
+        ``serve_summary`` — all computed from values the loop already
+        transfers, so the telemetry session adds zero device syncs.
         """
         if request_streams and isinstance(request_streams[0], Request):
             request_streams = [request_streams]
@@ -246,7 +259,8 @@ class MultiTenantService:
                 cols["arrival"][s, j] = arr
                 cols["deadline"][s, j] = dl
                 cols["q"][s, j] = q
-        tick, flush, queues = self._tick_fns(S)
+        tick, flush, queues = self._tick_fns(
+            S, device_telemetry=telemetry is not None)
         n_ticks = ticks if ticks is not None else self.env.cfg.periods
         t_s = float(self.env.cfg.t_s_us)
         head = np.zeros((S,), np.int64)    # first not-yet-admitted row
@@ -254,6 +268,8 @@ class MultiTenantService:
         tick_wall_us: list[float] = []
         depth_sum = 0
         admitted = deferred = 0
+        win = int(window) if telemetry is not None else 0
+        w_first, w_adm, w_def, w_comp, w_depth = 0, 0, 0, 0, 0
         lane = np.arange(K)
         # all per-tick keys drawn up front: a host-side split per tick
         # would cost two extra dispatches inside the serving loop
@@ -280,6 +296,21 @@ class MultiTenantService:
             admitted += int(n_adm.sum())
             deferred += int((n_stage - n_adm).sum())
             depth_sum += int(np.asarray(out["depth"]).sum())
+            if win:
+                w_adm += int(n_adm.sum())
+                w_def += int((n_stage - n_adm).sum())
+                w_comp += int(comp.sum())
+                w_depth += int(np.asarray(out["depth"]).sum())
+                if i + 1 - w_first >= win or i == n_ticks - 1:
+                    w_wall = tick_wall_us[w_first:i + 1]
+                    telemetry.emit(
+                        "serve_window", tick_first=w_first, tick_last=i,
+                        tick_p50_us=float(np.percentile(w_wall, 50)),
+                        tick_p99_us=float(np.percentile(w_wall, 99)),
+                        admitted=w_adm, deferred=w_def, completed=w_comp,
+                        mean_depth=w_depth / max(len(w_wall) * S, 1))
+                    w_first, w_adm, w_def, w_comp, w_depth = \
+                        i + 1, 0, 0, 0, 0
             if comp.any():
                 self._record(out, comp, completions)
         queues, fout = flush(queues)
@@ -307,6 +338,23 @@ class MultiTenantService:
                      tick_wall_us=tick_wall_us, admitted=admitted,
                      deferred=deferred, unserved=unserved,
                      mean_depth=depth_sum / max(n_ticks, 1))
+        if "tele_depth_hist" in final:
+            # the device-accumulated block, read back at the flush
+            stats["device_tele"] = dict(
+                depth_hist=final["tele_depth_hist"].sum(axis=0).tolist(),
+                depth_edges=final["tele_depth_edges"][0].tolist(),
+                committed=int(final["tele_committed"].sum()),
+                ticks=int(final["tele_ticks"][0]))
+        if telemetry is not None:
+            ten_counted = final["ten_counted"].sum(axis=0)
+            ten_hit = final["ten_hit"].sum(axis=0)
+            for name, row in _tenant_table(names, ten_counted,
+                                           ten_hit).items():
+                telemetry.emit("tenant", tenant=name, jobs=row["jobs"],
+                               sla_rate=row["sla_rate"])
+            telemetry.emit("serve_summary",
+                           sla_rate=aggregate["sla_rate"],
+                           counted=tot_c, ticks=n_ticks)
         return dict(metrics=metrics, aggregate=aggregate,
                     completions=completions, stats=stats)
 

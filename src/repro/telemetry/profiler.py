@@ -1,0 +1,22 @@
+"""Profiler hooks: ``jax.profiler`` trace capture for drivers.
+
+``--profile-dir PATH`` on ``launch/rl_train.py`` / ``launch/serve.py``
+wraps the hot loop in :func:`profile_trace`; the captured TensorBoard /
+Perfetto trace is readable because the round body, rollout scan, DDPG
+update, and serving tick are annotated with ``jax.named_scope`` (see
+``repro.core.train`` / ``repro.core.serve`` and
+docs/OBSERVABILITY.md "Reading a trace").
+"""
+from __future__ import annotations
+
+import contextlib
+
+
+def profile_trace(profile_dir: str | None):
+    """Context manager capturing a ``jax.profiler`` trace into
+    ``profile_dir``; a falsy dir is a no-op (the zero-overhead default,
+    so drivers can wrap their loop unconditionally)."""
+    if not profile_dir:
+        return contextlib.nullcontext()
+    import jax
+    return jax.profiler.trace(profile_dir)

@@ -1,0 +1,48 @@
+"""Run provenance: git commit, wall-clock timestamp, jax identity.
+
+Shared by the telemetry run header AND ``benchmarks.common.bench_meta``
+so that every JSONL stream and every committed ``BENCH_*.json`` is
+attributable to a commit + a point in time + a backend — numbers are
+only comparable across runs on the same jax/backend, and a SHA turns
+"which build produced this artifact?" from archaeology into a lookup.
+"""
+from __future__ import annotations
+
+import datetime
+import functools
+import os
+import subprocess
+
+
+@functools.lru_cache(maxsize=1)
+def git_sha() -> str:
+    """HEAD commit of the repo containing this file (``unknown`` when
+    git is unavailable — telemetry must never fail a run).  A dirty
+    working tree is marked with a ``-dirty`` suffix."""
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=repo, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=repo,
+            capture_output=True, text=True, timeout=10, check=True)
+        return sha + ("-dirty" if dirty.stdout.strip() else "")
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def iso_now() -> str:
+    """Current UTC time as an ISO-8601 string (second precision)."""
+    return datetime.datetime.now(datetime.timezone.utc).strftime(
+        "%Y-%m-%dT%H:%M:%SZ")
+
+
+def run_meta() -> dict:
+    """The provenance block: commit, timestamp, jax identity, host."""
+    import jax       # deferred: runmeta must stay importable host-only
+    return dict(git_sha=git_sha(), created_at=iso_now(),
+                jax_version=jax.__version__,
+                backend=jax.default_backend(),
+                host_cores=os.cpu_count() or 1)
